@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: wall timing, compiled-memory probes, CSV."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall microseconds per call (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def compiled_temp_bytes(fn: Callable, *abstract_args) -> Optional[int]:
+    """Peak temp bytes from the compiled module (1-device; the CPU backend
+    promotes bf16 buffers to f32, so treat as an upper bound ~2x TPU)."""
+    try:
+        compiled = jax.jit(fn).lower(*abstract_args).compile()
+        ma = compiled.memory_analysis()
+        return int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def scale_note() -> str:
+    return ("CPU container: shapes scaled down from the paper's "
+            "(batch 16, seq 512); ratios are the comparable signal")

@@ -1,0 +1,43 @@
+"""Figure 10 analogue: model quality (PPL on the synthetic corpus) vs
+sparsity strength for sparse MHA and routed FFN."""
+import dataclasses
+import math
+
+from benchmarks.common import emit
+from repro import configs
+from repro.data.pipeline import DataConfig, synthetic_dataset
+from repro.optim.adamw import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(fast: bool = True) -> None:
+    steps = 40 if fast else 150
+    base = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512)
+    grid = [
+        ("dense", dict(sparse_mha=False, routed_ffn=False)),
+        ("mha_1_4", dict(attn_top_fraction=0.25, routed_ffn=False)),
+        ("mha_1_8", dict(attn_top_fraction=0.125, routed_ffn=False)),
+        ("mha_1_16", dict(attn_top_fraction=0.0625, routed_ffn=False)),
+        ("ffn_3_4", dict(sparse_mha=False, ffn_active_groups=6)),
+        ("ffn_1_2", dict(sparse_mha=False, ffn_active_groups=4)),
+        ("ffn_1_4", dict(sparse_mha=False, ffn_active_groups=2)),
+        ("spt_default", dict(attn_top_fraction=0.125, ffn_active_groups=4)),
+    ]
+    for name, kw in grid:
+        cfg = base.with_spt(**kw)
+        data = synthetic_dataset(
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                       global_batch=8, branching=2, seed=7), steps=steps + 1)
+        t = Trainer(cfg, OptimizerConfig(lr=3e-3, total_steps=steps),
+                    TrainerConfig(total_steps=steps, log_interval=steps))
+        rep = t.run(data)
+        last = rep["metrics"][-1]
+        emit(f"fig10.{name}", 0.0,
+             f"ppl={math.exp(min(20, last['lm_loss'])):.2f};"
+             f"loss={last['lm_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,44 @@
+"""Figure 3 + Figure 5 analogues: (3) CDF of softmax attention weights —
+the top-15% share motivates sparse MHA; (5) singular-value CDFs of the FFN
+inner projection vs its output — high-rank weights / low-rank activations
+motivate dynamic (not static) pruning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def main(fast: bool = True) -> None:
+    key = jax.random.PRNGKey(0)
+    n, d = (256, 64) if fast else (512, 128)
+    # correlated q/k (trained-attention stand-in)
+    base = jax.random.normal(key, (n, d))
+    q = base + 0.4 * jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    k = base + 0.4 * jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+    w = jax.nn.softmax(q @ k.T / np.sqrt(d), axis=-1)
+    ws = np.sort(np.asarray(w), axis=-1)[:, ::-1]
+    cum = ws.cumsum(-1) / ws.sum(-1, keepdims=True)
+    for frac in (0.05, 0.15, 0.25):
+        share = cum[:, int(frac * n) - 1].mean()
+        emit(f"fig3.top{int(frac * 100)}pct_mass", 0.0, f"{share:.3f}")
+
+    # FFN: W_I high rank, H = relu(X W_I) low rank
+    dff = 4 * d
+    wi = jax.random.normal(jax.random.fold_in(key, 3), (d, dff)) / np.sqrt(d)
+    x = jax.random.normal(jax.random.fold_in(key, 4), (n, d)) @ \
+        jax.random.normal(jax.random.fold_in(key, 5), (d, d)) / np.sqrt(d)
+    h = jax.nn.relu(x @ wi)
+    sv_w = np.linalg.svd(np.asarray(wi, np.float32), compute_uv=False)
+    sv_h = np.linalg.svd(np.asarray(h, np.float32), compute_uv=False)
+
+    def top25_energy(sv):
+        c = (sv ** 2).cumsum() / (sv ** 2).sum()
+        return c[len(sv) // 4]
+
+    emit("fig5.weight_top25pct_energy", 0.0, f"{top25_energy(sv_w):.3f}")
+    emit("fig5.hidden_top25pct_energy", 0.0, f"{top25_energy(sv_h):.3f}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,27 @@
+"""Figure 8 analogue: throughput + peak memory for the 5 paper Table-2
+blocks under Full / LoRA / SPT."""
+from benchmarks.blocks import bench_block
+from benchmarks.common import emit
+
+BLOCKS = ("opt-1024", "opt-2048", "opt-2560", "llama-2560", "llama-4096")
+
+
+def main(fast: bool = True) -> None:
+    names = BLOCKS[:2] if fast else BLOCKS
+    for name in names:
+        rows = {}
+        for variant in ("full", "lora", "spt"):
+            r = bench_block(name, variant, scale=8 if fast else 4,
+                            batch=2 if fast else 4,
+                            seq=128 if fast else 256)
+            rows[variant] = r
+            emit(f"fig8.{name}.{variant}", r["us"],
+                 f"tok_s={r['tokens_per_s']:.0f};temp_mb={r['temp_mb']:.1f}")
+        if rows["full"]["us"]:
+            emit(f"fig8.{name}.speedup_spt_vs_full", 0.0,
+                 f"{rows['full']['us'] / rows['spt']['us']:.2f}x;"
+                 f"mem={rows['spt']['temp_mb'] / max(rows['full']['temp_mb'], 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main(fast=False)

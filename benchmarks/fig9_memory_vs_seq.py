@@ -1,0 +1,27 @@
+"""Figure 9 analogue: peak memory vs sequence length (OPT-2048 family).
+Memory comes from the compiled module's memory_analysis — the quadratic
+attention term is what SPT's sparse MHA removes."""
+import jax
+
+from benchmarks.blocks import block_step, reduced
+from benchmarks.common import emit
+
+
+def main(fast: bool = True) -> None:
+    seqs = (128, 256, 512) if fast else (128, 256, 512, 1024)
+    for variant in ("lora", "spt"):
+        cfg = reduced("opt-2048", scale=8 if fast else 4, variant=variant)
+        step, params = block_step(cfg, "both")
+        ax = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        for s in seqs:
+            import jax.numpy as jnp
+            xs = jax.ShapeDtypeStruct((2, s, cfg.d_model), jnp.bfloat16)
+            from benchmarks.common import compiled_temp_bytes
+            mem = compiled_temp_bytes(step, ax, xs)
+            emit(f"fig9.{variant}.seq{s}", 0.0,
+                 f"temp_mb={(mem or 0) / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,75 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json."""
+import json
+import pathlib
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+ARCH_ORDER = ["grok-1-314b", "mixtral-8x22b", "recurrentgemma-9b",
+              "phi-3-vision-4.2b", "mamba2-780m", "qwen3-0.6b",
+              "h2o-danube-1.8b", "gemma-7b", "h2o-danube-3-4b",
+              "whisper-base"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(outdir: str = "results/dryrun") -> List[dict]:
+    rows = []
+    for p in sorted(pathlib.Path(outdir).glob("*.json")):
+        try:
+            rows.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return rows
+
+
+def table(rows: List[dict], mesh: str = "single") -> str:
+    by_key = {(r["arch"], r["shape"]): r for r in rows
+              if r.get("mesh") == mesh}
+    lines = ["| arch | shape | status | t_comp(ms) | t_mem(ms) | t_coll(ms) "
+             "| bound | useful | temp(GB/dev) |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = by_key.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skipped "
+                             f"({r['reason'][:40]}...) | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            rl = r.get("roofline_exact") or r.get("roofline_scanned")
+            mem = r.get("memory_analysis") or {}
+            temp = mem.get("temp_size_in_bytes", 0) / 1e9
+            useful = r.get("useful_flops_ratio")
+            u = f"{useful:.2f}" if isinstance(useful, float) else "-"
+            lines.append(
+                f"| {arch} | {shape} | ok | {rl['t_compute']*1e3:.1f} | "
+                f"{rl['t_memory']*1e3:.1f} | {rl['t_collective']*1e3:.1f} | "
+                f"{rl['bottleneck']} | {u} | {temp:.1f} |")
+    return "\n".join(lines)
+
+
+def main(fast: bool = True) -> None:
+    rows = load()
+    ok = sum(r["status"] == "ok" for r in rows)
+    skipped = sum(r["status"] == "skipped" for r in rows)
+    err = sum(r["status"] not in ("ok", "skipped") for r in rows)
+    emit("roofline.cells_ok", 0.0, f"{ok}")
+    emit("roofline.cells_skipped", 0.0, f"{skipped}")
+    emit("roofline.cells_error", 0.0, f"{err}")
+    for r in rows:
+        if r["status"] == "ok" and r.get("roofline_exact") and \
+                r.get("mesh") == "single":
+            rl = r["roofline_exact"]
+            emit(f"roofline.{r['arch']}.{r['shape']}",
+                 rl["t_bound"] * 1e6,
+                 f"bound={rl['bottleneck']};useful="
+                 f"{r.get('useful_flops_ratio')}")
+
+
+if __name__ == "__main__":
+    print(table(load(), "single"))

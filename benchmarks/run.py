@@ -1,0 +1,51 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV lines.  ``--full`` uses the larger (slower) shapes.
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    from benchmarks import (fig3_fig5_distributions, fig8_blocks,
+                            fig9_memory_vs_seq, fig10_quality,
+                            roofline_report, table1_decomposition,
+                            table3_end2end, table4_sparsity, table5_kernels,
+                            table6_alternatives)
+    suites = [
+        ("table1", table1_decomposition.main),
+        ("table3", table3_end2end.main),
+        ("table4", table4_sparsity.main),
+        ("table5", table5_kernels.main),
+        ("table6", table6_alternatives.main),
+        ("fig3_fig5", fig3_fig5_distributions.main),
+        ("fig8", fig8_blocks.main),
+        ("fig9", fig9_memory_vs_seq.main),
+        ("fig10", fig10_quality.main),
+        ("roofline", roofline_report.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn(fast=fast)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{name}.SUITE_ERROR,0,failed")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,19 @@
+"""Table 1 analogue: running-time and peak-memory decomposition of one
+Transformer block into MHA and FFN for Full / LoRA / SPT (OPT-2048 family,
+dims scaled for CPU; ratios are the signal)."""
+from benchmarks.blocks import bench_block
+from benchmarks.common import emit
+
+
+def main(fast: bool = True) -> None:
+    scale = 8 if fast else 4
+    for variant in ("full", "lora", "spt"):
+        for module in ("mha", "ffn", "both"):
+            r = bench_block("opt-2048", variant, module=module, scale=scale,
+                            batch=2 if fast else 4, seq=128 if fast else 256)
+            emit(f"table1.{variant}.{module}", r["us"],
+                 f"temp_mb={r['temp_mb']:.1f}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,71 @@
+"""Table 5 analogue: per-operator breakdown of sparse MHA and routed FFN
+(PQ assign / top-L thresholds / gather-attention / dispatch / grouped GEMM),
+timed on the jnp execution path (the CPU stand-in for the CUDA kernels the
+paper profiles; the Pallas kernels are the TPU-target forms)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import dispatch, pq
+from repro.core import routed_ffn as rf
+from repro.core import sparse_attention as sa
+from repro.core.lora import LoRAConfig
+from repro.core.params import init_tree
+
+
+def main(fast: bool = True) -> None:
+    n, d, hq, hk, b = (256, 64, 4, 2, 2) if fast else (512, 64, 8, 4, 4)
+    pcfg = pq.PQConfig(head_dim=d, code_dim=8, num_codewords=16)
+    cb = init_tree(pq.param_defs(pcfg), jax.random.PRNGKey(0))["codebooks"]
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.125, min_l=8,
+                                    chunk_q=128)
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, hq, n, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, hk, n, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, hk, n, d))
+
+    f_assign = jax.jit(lambda x: pq.assign(x, cb))
+    emit("table5.mha.pq_assign", time_fn(f_assign, q))
+
+    codes_q, codes_k = pq.assign(q, cb), pq.assign(k, cb)
+
+    def select(cq, ck):
+        s = pq.match_scores(cq.reshape(b, hq, n, -1),
+                            jnp.repeat(ck, hq // hk, axis=1), 16)
+        mask = sa.attention_mask(jnp.arange(n), jnp.arange(n), True, None)
+        return sa.bucket_select(s, mask[None, None], sa.top_l(n, scfg, None),
+                                pcfg.num_books)
+
+    emit("table5.mha.topl_select", time_fn(jax.jit(select), codes_q, codes_k))
+
+    full = jax.jit(lambda q, k, v: sa.sparse_mha(q, k, v, cb, scfg, d ** -0.5)[0])
+    emit("table5.mha.sparse_attention_full", time_fn(full, q, k, v))
+    dense = jax.jit(lambda q, k, v: sa.dense_attention(q, k, v, d ** -0.5))
+    emit("table5.mha.dense_attention_ref", time_fn(dense, q, k, v))
+
+    # routed FFN decomposition
+    lcfg = LoRAConfig(rank=8, alpha=8.0)
+    rcfg = rf.RoutedFFNConfig(d_model=128, d_ff=512, num_groups=8,
+                              active_groups=4, capacity_factor=1.5)
+    p = init_tree(rf.param_defs(rcfg, lcfg), jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, n, 128))
+
+    route_fn = jax.jit(lambda x: rf.route(x, p["router"], rcfg)[0])
+    emit("table5.ffn.router", time_fn(route_fn, x))
+
+    def disp(x):
+        choice, gate, _ = rf.route(x, p["router"], rcfg)
+        cap = dispatch.capacity(n, 8, 4, 1.5)
+        plan = dispatch.make_plan(choice, gate, 8, cap)
+        return dispatch.gather(x, plan)
+
+    emit("table5.ffn.dispatch_gather", time_fn(jax.jit(disp), x))
+    grouped = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                              impl="grouped")[0])
+    emit("table5.ffn.routed_full", time_fn(grouped, x))
+    densef = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                             impl="dense")[0])
+    emit("table5.ffn.dense_masked_ref", time_fn(densef, x))
+
+
+if __name__ == "__main__":
+    main(fast=False)

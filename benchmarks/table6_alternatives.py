@@ -1,0 +1,48 @@
+"""Table 6 analogue: Naive-PQ (float-score sort / lax.top_k) vs the
+bucket-sort selection.  The paper's GPU finding (4.6x slower) appears on
+TPU as BOTH a time gap and an SPMD one (sort forces an all-gather of the
+score tensor — EXPERIMENTS.md §Perf it4)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import pq
+from repro.core import sparse_attention as sa
+from repro.core.params import init_tree
+
+
+def main(fast: bool = True) -> None:
+    n = 512 if fast else 1024
+    l = n // 8
+    pcfg = pq.PQConfig(head_dim=64, code_dim=8, num_codewords=16)
+    cb = init_tree(pq.param_defs(pcfg), jax.random.PRNGKey(0))["codebooks"]
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 4, n, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 4, n, 64))
+    codes_q, codes_k = pq.assign(q, cb), pq.assign(k, cb)
+    mask = sa.attention_mask(jnp.arange(n), jnp.arange(n), True, None)
+
+    def naive(cq, ck):
+        # float approximate distances (codeword inner-product table) + sort
+        cb_dots = jnp.einsum("med,mfd->mef", cb, cb)      # (M, E, E)
+        s = jnp.zeros((2, 4, n, n), jnp.float32)
+        for m in range(pcfg.num_books):
+            s = s + cb_dots[m, cq[..., m][..., :, None],
+                            ck[..., m][..., None, :]]
+        return jax.lax.top_k(jnp.where(mask, s, -jnp.inf), l)[1]
+
+    def bucket(cq, ck):
+        s = pq.match_scores(cq, ck, 16)
+        return sa.bucket_select(s, mask[None, None], l, pcfg.num_books)[0]
+
+    t_naive = time_fn(jax.jit(naive), codes_q, codes_k, iters=3)
+    t_bucket = time_fn(jax.jit(bucket), codes_q, codes_k, iters=3)
+    emit("table6.naive_pq_sort", t_naive)
+    emit("table6.bucket_select", t_bucket,
+         f"cpu_ratio={t_naive / t_bucket:.2f}x (paper: 4.6x on GPU; on the "
+         "TPU target the sort additionally forces an SPMD all-gather of the "
+         "score tensor — EXPERIMENTS.md §Perf it4 — so bucket wins there "
+         "regardless of scalar throughput)")
+
+
+if __name__ == "__main__":
+    main(fast=False)

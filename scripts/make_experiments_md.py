@@ -1,0 +1,96 @@
+"""Generate EXPERIMENTS.md from results/dryrun + results/hillclimb JSONs."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+from repro import configs                      # noqa: E402
+from repro.configs.base import SHAPES_BY_NAME  # noqa: E402
+from repro.launch import roofline              # noqa: E402
+
+ARCHS = ["grok-1-314b", "mixtral-8x22b", "recurrentgemma-9b",
+         "phi-3-vision-4.2b", "mamba2-780m", "qwen3-0.6b",
+         "h2o-danube-1.8b", "gemma-7b", "h2o-danube-3-4b", "whisper-base"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    out = {}
+    for p in pathlib.Path(d).glob("*.json"):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r["mesh"], p.stem)] = r
+    return out
+
+
+def useful(r):
+    """Recompute MODEL_FLOPS / HLO_FLOPs with the current convention."""
+    try:
+        cfg = configs.get_config(r["arch"])
+        shape = SHAPES_BY_NAME[r["shape"]]
+        if shape.kind == "train":
+            mf = roofline.model_flops(cfg, shape.global_batch * shape.seq_len)
+        elif shape.kind == "prefill":
+            mf = roofline.model_flops(cfg, shape.global_batch * shape.seq_len) / 3
+        else:
+            mf = 2.0 * roofline.active_params(cfg) * shape.global_batch
+        fl = (r.get("roofline_exact") or {}).get("flops")
+        return (mf / r["chips"]) / fl if fl else None
+    except Exception:
+        return None
+
+
+def main():
+    rows = load("results/dryrun")
+    single = {(a, s): r for (a, s, m, _), r in rows.items() if m == "single"
+              and "_lora" not in _ and "_full" not in _}
+    multi = {(a, s): r for (a, s, m, _), r in rows.items() if m == "multi"}
+
+    lines = []
+    lines.append("### Baseline roofline table — single pod 16x16 = 256 chips "
+                 "(per-device, per step)\n")
+    lines.append("| arch | shape | t_compute | t_memory | t_collective | "
+                 "bound | useful FLOPs | temp GB/dev | compile |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            r = single.get((a, s))
+            if r is None:
+                lines.append(f"| {a} | {s} | - | - | - | - | - | - | MISSING |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | – | – | – | – | – | – | "
+                             f"skipped: {r['reason'][:58]} |")
+                continue
+            rl = r.get("roofline_exact") or r.get("roofline_scanned")
+            u = useful(r)
+            us = f"{u:.2f}" if u else "-"
+            temp = (r.get("memory_analysis") or {}).get(
+                "temp_size_in_bytes", 0) / 1e9
+            lines.append(
+                f"| {a} | {s} | {rl['t_compute']*1e3:.1f} ms | "
+                f"{rl['t_memory']*1e3:.0f} ms | {rl['t_collective']*1e3:.0f} ms | "
+                f"{rl['bottleneck']} | {us} | {temp:.1f} | "
+                f"ok ({r.get('compile_s', 0):.0f}s) |")
+
+    lines.append("\n### Multi-pod compile proof — 2x16x16 = 512 chips\n")
+    lines.append("| arch | " + " | ".join(SHAPES) + " |")
+    lines.append("|---|" + "---|" * len(SHAPES))
+    for a in ARCHS:
+        cells = []
+        for s in SHAPES:
+            r = multi.get((a, s))
+            if r is None:
+                cells.append("MISSING")
+            elif r["status"] == "ok":
+                cells.append(f"ok ({r.get('compile_s', 0):.0f}s)")
+            elif r["status"] == "skipped":
+                cells.append("skip")
+            else:
+                cells.append("ERROR")
+        lines.append(f"| {a} | " + " | ".join(cells) + " |")
+
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Config dataclasses: model architecture + SPT (paper technique) knobs.
+
+Every assigned architecture is an instance of ModelConfig; the SPT features
+(sparse MHA / routed FFN / LoRA) are orthogonal switches in SPTConfig so any
+arch can run Full / LoRA / SPT — mirroring the paper's baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SPTConfig:
+    """Paper-technique configuration (defaults = paper defaults)."""
+    sparse_mha: bool = True
+    routed_ffn: bool = True
+    lora: LoRAConfig = LoRAConfig(rank=16, alpha=16.0, enabled=True)
+    # sparse MHA (§4.1): keep top-L = top_fraction * n attention weights
+    attn_top_fraction: float = 0.125
+    attn_min_l: int = 16
+    attn_pad_l_to: int = 1          # set 128 on TPU for MXU alignment
+    pq_code_dim: int = 8            # d' (paper §5.1)
+    pq_codewords: int = 16          # E (paper §5.1)
+    pq_update_interval: int = 20    # codebook refresh cadence (paper §5.1)
+    select_granularity: str = "qhead"   # "kvgroup" = GQA-shared selection opt
+    chunk_q: int = 256
+    attn_impl: str = "sparse_jnp"   # sparse_jnp | dense | pallas
+    # routed FFN (§4.2): G groups, G' active (beta = G'/G)
+    ffn_groups: int = 8
+    ffn_active_groups: int = 4
+    ffn_capacity_factor: float = 1.25
+    dispatch_pad: int = 8           # 128 => capacity dim shardable (perf)
+    ffn_impl: str = "grouped"       # grouped | dense
+    routed_ffn_in_experts: bool = False  # sub-route inside MoE experts
+    lb_loss_weight: float = 0.01
+    qerr_loss_weight: float = 0.0
+
+    def disabled(self) -> "SPTConfig":
+        return dataclasses.replace(self, sparse_mha=False, routed_ffn=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 => d_model // num_heads
+    pattern: Tuple[str, ...] = ("attn",)   # block types, cycled over layers
+    activation: str = "silu"
+    gated_ffn: bool = True         # SwiGLU/GeGLU
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    qk_norm: bool = False
+    rope_theta: Optional[float] = 10000.0
+    positional: str = "rope"       # rope | learned | none
+    max_position: int = 1 << 20    # learned-pos table size
+    window: Optional[int] = None   # sliding-window attention
+    logits_softcap: Optional[float] = None
+    tie_embeddings: bool = False
+    scale_embed: bool = False      # gemma-style sqrt(d) embedding scale
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 2
+    moe_capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    # recurrent (RG-LRU)
+    lru_width: int = 0             # 0 => d_model
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    # modality frontend (stub): number of prepended embedding tokens
+    frontend: Optional[str] = None         # None | vision | audio
+    frontend_tokens: int = 0
+    # numerics
+    dtype: object = jnp.bfloat16
+    # the paper's technique
+    spt: SPTConfig = SPTConfig()
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def d_inner(self) -> int:      # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so TP-16 and MXU lanes divide."""
+        return -(-self.vocab_size // 256) * 256
+
+    def layer_types(self) -> Tuple[str, ...]:
+        reps = -(-self.num_layers // len(self.pattern))
+        return tuple((self.pattern * reps)[: self.num_layers])
+
+    def with_spt(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, spt=dataclasses.replace(self.spt, **kw))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One dry-run cell: an input-shape regime for an arch."""
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                      # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", "train", 4096, 256),
+    ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    ShapeSpec("decode_32k", "decode", 32768, 128),
+    ShapeSpec("long_500k", "decode", 524288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

@@ -1,0 +1,28 @@
+"""mamba2-780m [ssm]: 48L d_model=1536 (attention-free) d_ff=0 vocab=50280,
+ssm_state=128 — SSD (state-space duality).  [arXiv:2405.21060; unverified]
+
+SPT applicability: attention-free and FFN-free, so sparse MHA and routed FFN
+are inapplicable (DESIGN.md §Arch-applicability); SPT degenerates to LoRA on
+the SSM in/out projections."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m", family="ssm",
+        num_layers=48, d_model=1536, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        pattern=("ssd",), norm="rmsnorm", rope_theta=None,
+        positional="none",                  # SSM: conv carries position
+        ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+        conv_width=4, tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=2, d_model=64, vocab_size=256,
+        ssm_state=16, ssm_headdim=16, ssm_chunk=16,
+    )

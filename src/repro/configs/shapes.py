@@ -1,0 +1,63 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of a
+(arch x shape) cell — weak-type-correct, shardable, no device allocation.
+
+train/prefill  -> token batch (+ stub frontend embeddings)
+decode         -> one new token per sequence + the KV/state caches
+                  (cache specs come from the model's abstract cache fns)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _i32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: int = 0) -> Dict[str, Any]:
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    d = cfg.d_model
+    fe = cfg.frontend_tokens
+    emb = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {}
+        if cfg.family == "audio":        # enc-dec: seq applies to decoder
+            specs["frontend_embeds"] = emb((b, fe, d), jnp.bfloat16)
+            specs["tokens"] = _i32(b, s)
+        elif cfg.frontend:               # vlm: patches + text share seq_len
+            text = max(1, s - fe)
+            specs["frontend_embeds"] = emb((b, fe, d), jnp.bfloat16)
+            specs["tokens"] = _i32(b, text)
+        else:
+            specs["tokens"] = _i32(b, s)
+        if shape.kind == "train":
+            specs["labels"] = _i32(*specs["tokens"].shape)
+        return specs
+    if shape.kind == "decode":
+        return {"token": _i32(b), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def materialize(specs: Dict[str, Any], key: jax.Array,
+                vocab: int) -> Dict[str, jax.Array]:
+    """Random concrete inputs matching the specs (for smoke tests/benches)."""
+    out = {}
+    for name, spec in specs.items():
+        k = jax.random.fold_in(key, hash(name) % (1 << 30))
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            if name == "pos":
+                out[name] = jnp.zeros((), jnp.int32)
+            else:
+                out[name] = jax.random.randint(k, spec.shape, 0, vocab,
+                                               dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, jnp.float32
+                                          ).astype(spec.dtype)
+    return out

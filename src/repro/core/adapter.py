@@ -1,0 +1,99 @@
+"""Model Adapter (paper §3, Figure 2).
+
+Takes a *dense* pre-trained parameter tree (our model zoo's layout with
+``spt.disabled()``) and produces the SPT parameter tree for the same
+architecture: LoRA adapters inserted (zero-initialized so the function is
+unchanged at step 0), FFN weights re-blocked into routed groups, router and
+PQ codebooks initialized.  The inverse (merge) folds LoRA back for serving.
+
+This is the exact workflow the paper's ``[UPGRADE] mha.linear_q Linear ->
+LoRALinear`` log lines describe, reproduced structurally in JAX.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import params as P
+from repro.models import transformer
+
+
+def _reblock_ffn(dense_ffn: dict, cfg: ModelConfig, spt_defs: dict,
+                 spt_init: dict) -> dict:
+    """dense {wi:{w},wo:{w}[,wg]} -> routed {w_inner,w_outer[,w_gate],router,
+    lora_*} keeping the pre-trained weights bit-exact."""
+    g = cfg.spt.ffn_groups
+    d, dff = cfg.d_model, cfg.d_ff
+    f = dff // g
+    out = dict(spt_init)
+
+    def rows(w):        # (.., d, D) -> (.., G, d, F); handles stacked layers
+        lead = w.shape[:-2]
+        return w.reshape(*lead, d, g, f).swapaxes(-3, -2)
+
+    def cols(w):        # (.., D, d) -> (.., G, F, d)
+        lead = w.shape[:-2]
+        return w.reshape(*lead, g, f, d)
+
+    out["w_inner"] = rows(dense_ffn["wi"]["w"])
+    out["w_outer"] = cols(dense_ffn["wo"]["w"])
+    if "wg" in dense_ffn:
+        out["w_gate"] = rows(dense_ffn["wg"]["w"])
+    return out
+
+
+def adapt(dense_params: dict, dense_cfg: ModelConfig, spt_cfg: ModelConfig,
+          key: jax.Array) -> dict:
+    """Upgrade a dense-model tree to the SPT tree for ``spt_cfg``.
+
+    Requirements: same architecture dims; dense_cfg.spt has sparse features
+    off.  New parameters (LoRA B/C, router, codebooks) come from spt_cfg's
+    initializers; pre-trained weights are copied (FFN re-blocked).
+    """
+    spt_init = P.init_tree(transformer.lm_defs(spt_cfg), key)
+
+    def walk(dense: dict, spt: dict, path=()):
+        out = {}
+        for k, v in spt.items():
+            if k in ("router", "lora_inner", "lora_outer", "lora_gate",
+                     "pq", "lora"):
+                out[k] = v                      # fresh SPT-only params
+            elif k in ("w_inner", "w_outer", "w_gate"):
+                out[k] = v                      # handled by _reblock_ffn
+            elif isinstance(v, dict):
+                if k == "ffn" and "w_inner" in v and "wi" in dense.get(k, {}):
+                    out[k] = _reblock_ffn(dense[k], spt_cfg, None, v)
+                elif k in dense and isinstance(dense[k], dict):
+                    out[k] = walk(dense[k], v, path + (k,))
+                else:
+                    out[k] = v
+            else:
+                out[k] = dense[k] if k in dense else v
+        return out
+
+    return walk(dense_params, spt_init)
+
+
+def upgrade_report(dense_params: dict, adapted: dict) -> str:
+    """Human-readable '[UPGRADE]' log like the paper's Model Adapter."""
+    lines = []
+
+    def walk(d, a, path):
+        if not isinstance(a, dict):
+            return
+        for k, v in a.items():
+            p = path + (k,)
+            if k in ("lora", "lora_inner", "lora_outer", "lora_gate"):
+                lines.append(f"[UPGRADE] {'.'.join(path)} Linear -> LoRALinear")
+            elif k == "router":
+                lines.append(f"[UPGRADE] {'.'.join(path)} FFN -> RoutedFFN")
+            elif k == "pq":
+                lines.append(f"[UPGRADE] {'.'.join(path)} MHA -> SparseMHA")
+            elif isinstance(v, dict):
+                walk(d.get(k, {}) if isinstance(d, dict) else {}, v, p)
+
+    walk(dense_params, adapted, ())
+    return "\n".join(lines)

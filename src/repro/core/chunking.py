@@ -1,0 +1,66 @@
+"""Loop helpers with an *analysis mode* for exact cost accounting.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, not times its trip
+count (verified in EXPERIMENTS.md §Dry-run calibration).  Production code
+wants rolled loops (small HLO, bounded buffers); the roofline dry-run wants
+unrolled loops so FLOPs/bytes/collective counts are exact.  These wrappers
+switch on a contextvar: `maybe_map`/`maybe_scan` behave like lax.map /
+lax.scan normally and unroll into straight-line HLO under
+``analysis_mode()``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_ANALYSIS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_analysis_mode", default=False)
+
+
+@contextlib.contextmanager
+def analysis_mode(on: bool = True):
+    token = _ANALYSIS.set(on)
+    try:
+        yield
+    finally:
+        _ANALYSIS.reset(token)
+
+
+def in_analysis_mode() -> bool:
+    return _ANALYSIS.get()
+
+
+def maybe_map(fn: Callable, xs: jax.Array):
+    """lax.map, or an unrolled stack under analysis mode."""
+    if not _ANALYSIS.get():
+        return jax.lax.map(fn, xs)
+    outs = [fn(xs[i]) for i in range(xs.shape[0])]
+    return jax.tree_util.tree_map(lambda *ys: jnp.stack(ys, 0), *outs)
+
+
+def maybe_scan(body: Callable, init: Any, xs: Any,
+               length: Optional[int] = None):
+    """lax.scan, or an unrolled python loop under analysis mode."""
+    if not _ANALYSIS.get():
+        return jax.lax.scan(body, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        leaves = jax.tree_util.tree_leaves(xs)
+        n = leaves[0].shape[0]
+        slices = [jax.tree_util.tree_map(lambda a: a[i], xs)
+                  for i in range(n)]
+    carry = init
+    ys = []
+    for s in slices:
+        carry, y = body(carry, s)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs, 0), *ys)
+    return carry, stacked

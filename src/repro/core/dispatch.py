@@ -1,0 +1,123 @@
+"""Capacity-bucketed token dispatch — the TPU analogue of the paper's BSpMV
+(§5.2): "batch the tokens that activate the same block for efficient
+computation".
+
+On GPU the paper gathers a dynamic number of tokens per weight block and runs
+one GEMM per block on its own stream.  Under XLA/jit shapes must be static,
+so we use the standard fixed-capacity formulation; crucially the dispatch is
+**per sequence** (batch-local): ranks come from a cumsum along the sequence
+axis only, so under pjit every buffer keeps its batch sharding and no global
+collective is ever induced by routing (a global-cumsum formulation forces
+XLA to replicate the (B*S*K, d) dispatch buffers — measured in
+EXPERIMENTS.md §Dry-run calibration).
+
+Token t of sequence b activating block g lands in slot rank(t within (b, g))
+if below capacity; overflowing (token, choice) pairs are dropped (the
+monitor reports the fraction so capacity_factor can be raised).
+
+The same engine serves the routed FFN (top-G' of G row-blocks) and MoE
+layers (top-k of E experts) — the paper notes they are the same mechanism.
+
+Shapes: x (B, S, d); choice/gate (B, S, K); plan.index (B, G, C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Static-shape routing plan for one layer invocation."""
+    index: jax.Array      # (B, G, C) int32 — slot -> token position (S if empty)
+    slot_ok: jax.Array    # (B, G, C) bool
+    combine_w: jax.Array  # (B, G, C) f32
+    dropped: jax.Array    # () f32 — dropped fraction of (token, choice) pairs
+
+
+jax.tree_util.register_pytree_node(
+    DispatchPlan,
+    lambda p: ((p.index, p.slot_ok, p.combine_w, p.dropped), None),
+    lambda _, c: DispatchPlan(*c))
+
+
+def capacity(tokens_per_seq: int, num_groups: int, topk: int,
+             capacity_factor: float, pad: int = 8) -> int:
+    """Slots per (sequence, group), padded to a multiple of ``pad`` (>= 8).
+    pad=128 makes the capacity dim shardable 16-way for the dispatch-SP
+    optimization (EXPERIMENTS.md §Perf)."""
+    pad = max(8, pad)
+    c = int(tokens_per_seq * topk * capacity_factor / num_groups) + 1
+    c = -(-c // pad) * pad
+    return min(c, max(pad, -(-tokens_per_seq * topk // pad) * pad))
+
+
+def make_plan(choice: jax.Array, gate: jax.Array, num_groups: int,
+              cap: int) -> DispatchPlan:
+    """choice: (B, S, K) int32; gate: (B, S, K) f32."""
+    b, s, k = choice.shape
+    flat_choice = choice.reshape(b, s * k)
+    flat_gate = gate.reshape(b, s * k)
+    oh = jax.nn.one_hot(flat_choice, num_groups, dtype=jnp.int32)  # (B,SK,G)
+    ranks = jnp.cumsum(oh, axis=1) - oh                  # exclusive, per seq
+    rank = jnp.sum(ranks * oh, axis=-1)                  # (B, SK)
+    keep = rank < cap
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    token_id = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :], (b, s * k))
+    # flat (G*C)-destination per (token, choice); dropped -> OOB (drop mode).
+    # vmapped scatters lower to batched scatter so SPMD keeps batch sharding.
+    dest = jnp.where(keep, flat_choice * cap + rank, num_groups * cap)
+
+    def _scatter_row(di, so, cw, pos, tid, gt):
+        return (di.at[pos].set(tid, mode="drop"),
+                so.at[pos].set(True, mode="drop"),
+                cw.at[pos].set(gt, mode="drop"))
+
+    index0 = jnp.full((b, num_groups * cap), s, dtype=jnp.int32)
+    ok0 = jnp.zeros((b, num_groups * cap), dtype=bool)
+    cw0 = jnp.zeros((b, num_groups * cap), dtype=jnp.float32)
+    index, slot_ok, combine_w = jax.vmap(_scatter_row)(
+        index0, ok0, cw0, dest, token_id, flat_gate)
+    shape = (b, num_groups, cap)
+    return DispatchPlan(index.reshape(shape), slot_ok.reshape(shape),
+                        combine_w.reshape(shape), dropped)
+
+
+def gather(x: jax.Array, plan: DispatchPlan) -> jax.Array:
+    """(B, S, d) -> (B, G, C, d); empty slots read a zero row."""
+    b, s, d = x.shape
+    _, g, c = plan.index.shape
+    xz = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    out = jnp.take_along_axis(xz, plan.index.reshape(b, g * c)[..., None],
+                              axis=1)
+    return out.reshape(b, g, c, d)
+
+
+def combine(y: jax.Array, plan: DispatchPlan, seq_len: int) -> jax.Array:
+    """(B, G, C, d) -> (B, S, d) scatter-add with combine weights."""
+    b, g, c, d = y.shape
+    w = jnp.where(plan.slot_ok, plan.combine_w, 0.0).astype(y.dtype)
+    yw = (y * w[..., None]).reshape(b, g * c, d)
+
+    def _row(acc, pos, vals):                     # vmapped: batched scatter
+        return acc.at[pos].add(vals, mode="drop")
+
+    out = jnp.zeros((b, seq_len + 1, d), y.dtype)
+    out = jax.vmap(_row)(out, plan.index.reshape(b, g * c), yw)
+    return out[:, :seq_len]
+
+
+def load_balance_loss(router_probs: jax.Array, choice: jax.Array,
+                      num_groups: int) -> jax.Array:
+    """Switch-style auxiliary loss (paper §4.2 'load-balancing loss'):
+    G * sum_g f_g p_g over tokens of all sequences; == 1 at perfect balance.
+    router_probs: (B, S, G); choice: (B, S, K)."""
+    k = choice.shape[-1]
+    oh = jax.nn.one_hot(choice, num_groups, dtype=jnp.float32)  # (B,S,K,G)
+    f = jnp.mean(jnp.sum(oh, axis=2), axis=(0, 1)) / k          # (G,)
+    p = jnp.mean(router_probs.astype(jnp.float32), axis=(0, 1))  # (G,)
+    return num_groups * jnp.sum(f * p)

@@ -1,0 +1,82 @@
+"""LoRA: low-rank adaptation (paper §2.2, Eq. 5).
+
+Y = X W + s * (X B) C     with W frozen, B in R^{d x r}, C in R^{r x h}.
+
+B is normal-initialized, C zero-initialized so fine-tuning starts from the
+pre-trained function exactly (standard LoRA init; s = alpha / r).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 16
+    alpha: float = 16.0
+    enabled: bool = True
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / max(1, self.rank)
+
+
+def param_defs(d_in: int, d_out: int, cfg: LoRAConfig,
+               in_axis: Optional[str] = None,
+               out_axis: Optional[str] = None) -> dict:
+    """LoRA adapter defs for a (d_in, d_out) projection.
+
+    The B side carries the input sharding, the C side the output sharding,
+    so TP placement matches the frozen weight it adapts.
+    """
+    return {
+        "b": ParamDef((d_in, cfg.rank), jnp.float32,
+                      (in_axis, "lora_rank"), init="fan_in", trainable=True),
+        "c": ParamDef((cfg.rank, d_out), jnp.float32,
+                      ("lora_rank", out_axis), init="zeros", trainable=True),
+    }
+
+
+def linear_defs(d_in: int, d_out: int, cfg: LoRAConfig,
+                in_axis: Optional[str] = None,
+                out_axis: Optional[str] = None,
+                base_init: str = "fan_in",
+                dtype=jnp.bfloat16) -> dict:
+    """A frozen base projection + its LoRA adapter."""
+    out = {
+        "w": ParamDef((d_in, d_out), dtype, (in_axis, out_axis),
+                      init=base_init, trainable=False),
+    }
+    if cfg.enabled:
+        out["lora"] = param_defs(d_in, d_out, cfg, in_axis, out_axis)
+    return out
+
+
+def apply_lora(x: jax.Array, lora: dict, scale: float) -> jax.Array:
+    """s * (x B) C — computed narrow-first so FLOPs stay O(n d r)."""
+    xb = jnp.einsum("...d,dr->...r", x, lora["b"].astype(x.dtype))
+    return scale * jnp.einsum("...r,rh->...h", xb, lora["c"].astype(x.dtype))
+
+
+def linear(x: jax.Array, p: dict, cfg: LoRAConfig) -> jax.Array:
+    """Y = X W (+ LoRA delta). W is frozen — stop_gradient keeps the
+    backward graph free of dW even if the optimizer would mask it anyway."""
+    w = jax.lax.stop_gradient(p["w"])
+    y = jnp.einsum("...d,dh->...h", x, w.astype(x.dtype))
+    if cfg.enabled and "lora" in p:
+        y = y + apply_lora(x, p["lora"], cfg.scale)
+    return y
+
+
+def merge(p: dict, cfg: LoRAConfig) -> jax.Array:
+    """W' = W + s B C — inference-time merge (paper §2.2)."""
+    w = p["w"].astype(jnp.float32)
+    if cfg.enabled and "lora" in p:
+        w = w + cfg.scale * (p["lora"]["b"] @ p["lora"]["c"])
+    return w.astype(p["w"].dtype)

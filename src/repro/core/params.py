@@ -1,0 +1,238 @@
+"""Parameter definition machinery.
+
+Every model layer declares its parameters as a tree of :class:`ParamDef`
+(shape + dtype + *logical* partition axes + initializer).  From one tree of
+defs we derive, with guaranteed structural consistency:
+
+  * materialized parameters          (``init_tree``)
+  * ``jax.ShapeDtypeStruct`` stand-ins for AOT lowering (``abstract_tree``)
+  * ``PartitionSpec`` trees, after mapping logical axis names onto mesh axes
+    through a rule table (``spec_tree``)
+
+Logical axis names used throughout the framework (see sharding/rules.py for
+the mesh mapping):
+
+  embed      model width (d_model)               usually replicated
+  heads      query heads                          -> "model"
+  kv_heads   key/value heads                      -> "model" (when divisible)
+  head_dim   per-head dim                         replicated
+  ffn        FFN hidden dim                       -> "model"
+  group      routed-FFN group axis                replicated (blocks stay whole)
+  expert     MoE expert axis                      replicated (ffn dim sharded)
+  vocab      vocabulary                           -> "model"
+  lora_rank  LoRA inner rank                      replicated
+  layer      stacked-layer axis (lax.scan)        replicated
+  codebook / codeword / code_dim                  replicated (tiny)
+  conv / state / lru  (SSM/recurrent internals)   replicated or "model"
+  batch / seq                                     activation axes
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+Tree = Any  # nested dict of ParamDef / arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative description of a single parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal:0.02"  # zeros | ones | normal:<std> | uniform:<s> | fan_in
+    trainable: bool = True     # False => frozen (pre-trained base weights)
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch with shape {self.shape}")
+
+
+def _make_init(defn: ParamDef) -> Callable[[jax.Array], jax.Array]:
+    kind, _, arg = defn.init.partition(":")
+    shape, dtype = defn.shape, defn.dtype
+    if kind == "zeros":
+        return lambda key: jnp.zeros(shape, dtype)
+    if kind == "ones":
+        return lambda key: jnp.ones(shape, dtype)
+    if kind == "normal":
+        std = float(arg or 0.02)
+        return lambda key: (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    if kind == "uniform":
+        s = float(arg or 1.0)
+        return lambda key: jax.random.uniform(key, shape, jnp.float32, -s, s).astype(dtype)
+    if kind == "fan_in":
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / math.sqrt(max(1, fan_in))
+        return lambda key: (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    raise ValueError(f"unknown init {defn.init!r}")
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _map_defs(fn: Callable[[ParamDef], Any], tree: Tree) -> Tree:
+    if is_def(tree):
+        return fn(tree)
+    if isinstance(tree, Mapping):
+        return {k: _map_defs(fn, v) for k, v in tree.items()}
+    raise TypeError(f"bad def tree node: {type(tree)}")
+
+
+def init_tree(tree: Tree, key: jax.Array) -> Tree:
+    """Materialize parameters from a def tree (deterministic key splitting)."""
+    leaves = []
+
+    def collect(t, path):
+        if is_def(t):
+            leaves.append(path)
+        else:
+            for k in sorted(t.keys()):
+                collect(t[k], path + (k,))
+
+    collect(tree, ())
+    keys = jax.random.split(key, max(1, len(leaves)))
+    key_by_path = dict(zip(leaves, keys))
+
+    def build(t, path):
+        if is_def(t):
+            return _make_init(t)(key_by_path[path])
+        return {k: build(v, path + (k,)) for k, v in t.items()}
+
+    return build(tree, ())
+
+
+def abstract_tree(tree: Tree) -> Tree:
+    return _map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def spec_tree(tree: Tree, rules: Mapping[str, Any]) -> Tree:
+    """Map logical axes -> mesh axes producing a PartitionSpec tree.
+
+    ``rules[name]`` may be a mesh-axis name, a tuple of mesh axes, or None.
+    A logical axis missing from the rules is replicated.  A rule is applied
+    only if the dimension size is divisible by the mesh-axis extent recorded
+    in ``rules['__sizes__']`` (so small models degrade to replication instead
+    of failing to shard).
+    """
+    sizes = rules.get("__sizes__", {})
+
+    def axis_ok(dim: int, mesh_axes) -> bool:
+        if mesh_axes is None:
+            return True
+        axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+        total = 1
+        for a in axes:
+            total *= int(sizes.get(a, 1))
+        return total > 0 and dim % total == 0
+
+    def one(d: ParamDef) -> PartitionSpec:
+        if not d.axes:
+            return PartitionSpec()
+        out = []
+        used = set()
+        for dim, name in zip(d.shape, d.axes):
+            mesh_axes = rules.get(name) if name is not None else None
+            if mesh_axes is None or not axis_ok(dim, mesh_axes):
+                out.append(None)
+                continue
+            flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            if any(a in used for a in flat):
+                out.append(None)  # an axis can appear once per spec
+                continue
+            used.update(flat)
+            out.append(mesh_axes if isinstance(mesh_axes, str) else tuple(mesh_axes))
+        return PartitionSpec(*out)
+
+    return _map_defs(one, tree)
+
+
+def trainable_mask(tree: Tree) -> Tree:
+    """Boolean tree: True for trainable leaves (LoRA/router/codebooks)."""
+    return _map_defs(lambda d: d.trainable, tree)
+
+
+def stack_defs(tree: Tree, n: int) -> Tree:
+    """Prepend a ``layer`` axis of size n to every def (for lax.scan layers)."""
+
+    def one(d: ParamDef) -> ParamDef:
+        axes = d.axes if d.axes else (None,) * len(d.shape)
+        return dataclasses.replace(
+            d, shape=(n, *d.shape), axes=("layer", *axes))
+
+    return _map_defs(one, tree)
+
+
+def count_params(tree: Tree, only_trainable: Optional[bool] = None) -> int:
+    total = 0
+
+    def one(d: ParamDef):
+        nonlocal total
+        if only_trainable is None or d.trainable == only_trainable:
+            total += math.prod(d.shape)
+
+    _map_defs(one, tree)
+    return total
+
+
+def param_bytes(tree: Tree, only_trainable: Optional[bool] = None) -> int:
+    total = 0
+
+    def one(d: ParamDef):
+        nonlocal total
+        if only_trainable is None or d.trainable == only_trainable:
+            total += math.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+
+    _map_defs(one, tree)
+    return total
+
+
+def partition(tree: Tree, mask: Tree) -> Tuple[Tree, Tree]:
+    """Split a value tree into (selected, rest) by a bool tree of the same
+    dict structure.  Unselected positions become None (empty pytree), so
+    jax.grad over the selected tree never touches frozen tensors."""
+
+    def walk2(t, m):
+        if isinstance(t, Mapping):
+            return {k: walk2(t[k], m[k]) for k in t}
+        return None if m else t
+
+    def walk1(t, m):
+        if isinstance(t, Mapping):
+            return {k: walk1(t[k], m[k]) for k in t}
+        return t if m else None
+
+    return walk1(tree, mask), walk2(tree, mask)
+
+
+def combine(a: Tree, b: Tree) -> Tree:
+    """Inverse of :func:`partition`."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    assert isinstance(a, Mapping) and isinstance(b, Mapping)
+    return {k: combine(a.get(k), b.get(k)) for k in set(a) | set(b)}
+
+
+def tree_paths(tree: Tree) -> list:
+    out = []
+
+    def walk(t, path):
+        if is_def(t) or not isinstance(t, Mapping):
+            out.append(path)
+            return
+        for k in sorted(t.keys()):
+            walk(t[k], path + (k,))
+
+    walk(tree, ())
+    return out

@@ -1,0 +1,226 @@
+"""Routed FFN (paper §4.2, §5.2).
+
+The FFN inner projection W_I (d x D) is organized into G row-groups of
+F = D/G rows; the outer projection W_O (D x d) into the matching column
+groups.  A single-layer router x_R = x W_R (W_R in R^{d x G}) selects the
+top-G' groups by |x_R| per token; only those blocks are computed:
+
+    y = sum_{g in top-G'}  act(x W_I[g]) W_O[g]
+
+which equals the dense FFN with the non-activated entries of the hidden
+vector h zeroed (Figure 6a: prune rows of W_I and the matching columns of
+W_O — never the converse).  beta = G'/G is the FLOP fraction.
+
+Two execution paths with identical semantics:
+  * ``impl="dense"``   — mask-based oracle: full FFN, zero masked h.
+  * ``impl="grouped"`` — capacity-bucketed BSpMV analogue (core/dispatch.py):
+                         tokens batched per activated block, one dense GEMM
+                         per block, scatter-add combine.  This is the path
+                         whose FLOPs scale by beta.
+
+GeGLU/SwiGLU variants route the gate and up projections jointly (both are
+row-grouped) so the hidden mask stays consistent with the down projection.
+
+All activations keep the (B, S, ...) layout so batch sharding survives
+routing under pjit (see core/dispatch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch, lora
+from repro.core.params import ParamDef
+from repro.sharding import shard
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedFFNConfig:
+    d_model: int
+    d_ff: int
+    num_groups: int = 8            # G
+    active_groups: int = 4         # G' (beta = G'/G; paper default 1/2)
+    capacity_factor: float = 2.0   # slack so drop fraction ~ 0
+    activation: str = "relu"
+    gated: bool = False            # GeGLU/SwiGLU style (gate * up)
+    gate_outputs: bool = False     # beyond-paper: sigmoid(router logit) gate
+    capacity_pad: int = 8          # 128 enables dispatch-SP sharding (perf)
+    lb_loss_weight: float = 0.01
+
+    @property
+    def group_dim(self) -> int:
+        assert self.d_ff % self.num_groups == 0, (self.d_ff, self.num_groups)
+        return self.d_ff // self.num_groups
+
+    @property
+    def beta(self) -> float:
+        return self.active_groups / self.num_groups
+
+
+def param_defs(cfg: RoutedFFNConfig, lora_cfg: lora.LoRAConfig) -> dict:
+    g, d, f = cfg.num_groups, cfg.d_model, cfg.group_dim
+    defs = {
+        "router": ParamDef((d, cfg.num_groups), jnp.float32,
+                           ("embed", "group"), init="fan_in", trainable=True),
+        "w_inner": ParamDef((g, d, f), jnp.bfloat16,
+                            ("group", "embed", "ffn"), init="fan_in",
+                            trainable=False),
+        "w_outer": ParamDef((g, f, d), jnp.bfloat16,
+                            ("group", "ffn", "embed"), init="fan_in",
+                            trainable=False),
+    }
+    if cfg.gated:
+        defs["w_gate"] = ParamDef((g, d, f), jnp.bfloat16,
+                                  ("group", "embed", "ffn"), init="fan_in",
+                                  trainable=False)
+    if lora_cfg.enabled:
+        r = lora_cfg.rank
+        defs["lora_inner"] = {
+            "b": ParamDef((d, r), jnp.float32, ("embed", "lora_rank"),
+                          init="fan_in", trainable=True),
+            "c": ParamDef((g, r, f), jnp.float32, ("group", "lora_rank", "ffn"),
+                          init="zeros", trainable=True),
+        }
+        defs["lora_outer"] = {
+            "b": ParamDef((g, f, r), jnp.float32, ("group", "ffn", "lora_rank"),
+                          init="fan_in", trainable=True),
+            "c": ParamDef((r, d), jnp.float32, ("lora_rank", "embed"),
+                          init="zeros", trainable=True),
+        }
+        if cfg.gated:
+            defs["lora_gate"] = {
+                "b": ParamDef((d, r), jnp.float32, ("embed", "lora_rank"),
+                              init="fan_in", trainable=True),
+                "c": ParamDef((g, r, f), jnp.float32,
+                              ("group", "lora_rank", "ffn"),
+                              init="zeros", trainable=True),
+            }
+    return defs
+
+
+def route(x: jax.Array, router_w: jax.Array,
+          cfg: RoutedFFNConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router forward: top-G' groups by |logit| (paper: largest magnitude).
+
+    x: (B, S, d) -> (choice (B,S,G'), gate (B,S,G'), probs (B,S,G))
+    """
+    logits = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, choice = jax.lax.top_k(jnp.abs(logits), cfg.active_groups)
+    if cfg.gate_outputs:
+        gate = jax.nn.sigmoid(jnp.take_along_axis(logits, choice, axis=-1))
+    else:
+        gate = jnp.ones_like(choice, dtype=jnp.float32)
+    return choice.astype(jnp.int32), gate, probs
+
+
+def _act(cfg: RoutedFFNConfig) -> Callable:
+    return ACTIVATIONS[cfg.activation]
+
+
+def _dense_forward(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
+                   lora_cfg: lora.LoRAConfig,
+                   hidden_mask: jax.Array) -> jax.Array:
+    """Oracle: full dense FFN with the (B, S, D) hidden group mask applied."""
+    g, d, f = p["w_inner"].shape[0], cfg.d_model, cfg.group_dim
+
+    def inner(w_key, lora_key):
+        w = jax.lax.stop_gradient(
+            jnp.transpose(p[w_key], (1, 0, 2)).reshape(d, g * f))
+        up = jnp.einsum("bsd,df->bsf", x, w.astype(x.dtype))
+        if lora_cfg.enabled and lora_key in p:
+            li = p[lora_key]
+            c = jnp.transpose(li["c"], (1, 0, 2)).reshape(lora_cfg.rank, g * f)
+            xb = jnp.einsum("bsd,dr->bsr", x, li["b"].astype(x.dtype))
+            up = up + lora_cfg.scale * jnp.einsum(
+                "bsr,rf->bsf", xb, c.astype(x.dtype))
+        return up
+
+    up = inner("w_inner", "lora_inner")
+    if cfg.gated:
+        h = _act(cfg)(inner("w_gate", "lora_gate")) * up
+    else:
+        h = _act(cfg)(up)
+    h = h * hidden_mask.astype(h.dtype)
+    w_o = jax.lax.stop_gradient(p["w_outer"]).reshape(g * f, d)
+    y = jnp.einsum("bsf,fd->bsd", h, w_o.astype(x.dtype))
+    if lora_cfg.enabled and "lora_outer" in p:
+        lo = p["lora_outer"]
+        b_ = lo["b"].reshape(g * f, lora_cfg.rank)
+        hb = jnp.einsum("bsf,fr->bsr", h, b_.astype(x.dtype))
+        y = y + lora_cfg.scale * jnp.einsum(
+            "bsr,rd->bsd", hb, lo["c"].astype(x.dtype))
+    return y
+
+
+def _grouped_forward(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
+                     lora_cfg: lora.LoRAConfig, choice: jax.Array,
+                     gate_w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """BSpMV analogue: batch tokens per activated block, dense GEMM/block."""
+    b, s, d = x.shape
+    cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
+                            cfg.capacity_factor, pad=cfg.capacity_pad)
+    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
+    xg = dispatch.gather(x, plan)                        # (B, G, C, d)
+    xg = shard(xg, "batch", None, None, None)
+
+    def inner(w_key, lora_key):
+        w = jax.lax.stop_gradient(p[w_key]).astype(x.dtype)
+        up = jnp.einsum("bgcd,gdf->bgcf", xg, w)
+        if lora_cfg.enabled and lora_key in p:
+            li = p[lora_key]
+            xb = jnp.einsum("bgcd,dr->bgcr", xg, li["b"].astype(x.dtype))
+            up = up + lora_cfg.scale * jnp.einsum(
+                "bgcr,grf->bgcf", xb, li["c"].astype(x.dtype))
+        return up
+
+    up = inner("w_inner", "lora_inner")
+    if cfg.gated:
+        h = _act(cfg)(inner("w_gate", "lora_gate")) * up
+    else:
+        h = _act(cfg)(up)
+    h = shard(h, "batch", None, None, "ffn")
+    w_o = jax.lax.stop_gradient(p["w_outer"]).astype(x.dtype)
+    y = jnp.einsum("bgcf,gfd->bgcd", h, w_o)
+    if lora_cfg.enabled and "lora_outer" in p:
+        lo = p["lora_outer"]
+        hb = jnp.einsum("bgcf,gfr->bgcr", h, lo["b"].astype(x.dtype))
+        y = y + lora_cfg.scale * jnp.einsum(
+            "bgcr,rd->bgcd", hb, lo["c"].astype(x.dtype))
+    return dispatch.combine(y, plan, s), plan.dropped
+
+
+def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
+               lora_cfg: lora.LoRAConfig,
+               impl: str = "grouped") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Apply the routed FFN. x: (B, S, d) (2D inputs get a batch dim)."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    choice, gate_w, probs = route(x, p["router"], cfg)
+    aux = {
+        "lb_loss": dispatch.load_balance_loss(probs, choice, cfg.num_groups),
+        "dropped": jnp.zeros((), jnp.float32),
+    }
+    if impl == "dense":
+        oh = jax.nn.one_hot(choice, cfg.num_groups, dtype=jnp.float32)
+        group_mask = jnp.max(oh * gate_w[..., None], axis=2)   # (B, S, G)
+        hidden_mask = jnp.repeat(group_mask, cfg.group_dim, axis=-1)
+        y = _dense_forward(x, p, cfg, lora_cfg, hidden_mask)
+    elif impl == "grouped":
+        y, dropped = _grouped_forward(x, p, cfg, lora_cfg, choice, gate_w)
+        aux["dropped"] = dropped
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    y = y.astype(x.dtype)
+    return (y[0] if squeeze else y), aux

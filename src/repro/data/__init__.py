@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, markov_stream, pack_batches,  # noqa
+                                 synthetic_dataset)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the SPT hot spots (DESIGN.md §6).
+
+Each kernel directory ships:
+  <name>.py — pl.pallas_call body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (custom_vjp: fused forward, ref backward)
+  ref.py    — pure-jnp oracle (reuses the validated core/ implementations)
+
+Validated on CPU with interpret=True; TPU (v5e) is the compile target.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.pq_quantize.ops import pq_assign  # noqa: F401

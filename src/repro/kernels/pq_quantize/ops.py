@@ -1,0 +1,30 @@
+"""Public jit wrapper for the fused PQ assignment kernel.
+
+Codes are integer outputs (no gradient); the codebooks train through the
+DKM quantization-error loss on the jnp path, so no custom VJP is needed —
+the op is non-differentiable by construction (like the paper's).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.pq_quantize.pq_quantize import pq_assign_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def pq_assign(x: jax.Array, codebooks: jax.Array, *, tile_n: int = 256,
+              interpret: bool = True) -> jax.Array:
+    """x: (..., n, d); codebooks (M, E, d') -> (..., n, M) int32.
+
+    interpret=True by default in this CPU container; pass False on TPU.
+    """
+    lead = x.shape[:-2]
+    g = 1
+    for s in lead:
+        g *= s
+    xg = x.reshape(g, *x.shape[-2:])
+    codes = pq_assign_kernel(xg, codebooks, tile_n=tile_n,
+                             interpret=interpret)
+    return codes.reshape(*lead, x.shape[-2], codebooks.shape[0])

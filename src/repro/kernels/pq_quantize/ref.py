@@ -1,0 +1,9 @@
+"""Oracle for the PQ assignment kernel: the validated core implementation."""
+import jax
+
+from repro.core import pq
+
+
+def pq_assign_ref(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """x: (G, n, d) -> (G, n, M) int32."""
+    return pq.assign(x, codebooks)

@@ -1,0 +1,1 @@
+from repro.kernels.routed_ffn.ops import routed_ffn  # noqa: F401

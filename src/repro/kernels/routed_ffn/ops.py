@@ -1,0 +1,76 @@
+"""Public routed-FFN op: route+dispatch in jnp (sharding-aware), fused
+grouped GEMMs (incl. LoRA) in the Pallas kernel, combine in jnp.
+
+Drop-in for core.routed_ffn.routed_ffn; backward differentiates the
+reference grouped path (identical routing plan => identical function).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch, lora
+from repro.core.routed_ffn import RoutedFFNConfig, route
+from repro.core.routed_ffn import routed_ffn as routed_ffn_core
+from repro.kernels.routed_ffn.routed_ffn import grouped_ffn_kernel
+
+
+def _forward(x, p, cfg: RoutedFFNConfig, lora_cfg, interpret):
+    b, s, d = x.shape
+    choice, gate_w, probs = route(x, p["router"], cfg)
+    cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
+                            cfg.capacity_factor)
+    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
+    xg = dispatch.gather(x, plan)                       # (B, G, C, d)
+    lora_params = None
+    if lora_cfg.enabled and "lora_inner" in p:
+        lora_params = {k: p[k] for k in
+                       ("lora_inner", "lora_gate", "lora_outer") if k in p}
+    y = grouped_ffn_kernel(
+        xg, jax.lax.stop_gradient(p["w_inner"]),
+        jax.lax.stop_gradient(p["w_outer"]),
+        jax.lax.stop_gradient(p["w_gate"]) if cfg.gated else None,
+        lora_params, lora_cfg.scale, act=cfg.activation, interpret=interpret)
+    out = dispatch.combine(y.astype(x.dtype), plan, s)
+    aux = {
+        "lb_loss": dispatch.load_balance_loss(probs, choice, cfg.num_groups),
+        "dropped": plan.dropped,
+    }
+    return out, aux
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _op(x, p, cfg, lora_cfg, interpret):
+    return _forward(x, p, cfg, lora_cfg, interpret)
+
+
+def _fwd(x, p, cfg, lora_cfg, interpret):
+    out = _forward(x, p, cfg, lora_cfg, interpret)
+    return out, (x, p)
+
+
+def _bwd(cfg, lora_cfg, interpret, res, cts):
+    x, p = res
+    g, aux_ct = cts
+
+    def ref(x_, p_):
+        return routed_ffn_core(x_, p_, cfg, lora_cfg, impl="grouped")
+
+    _, vjp = jax.vjp(ref, x, p)
+    return vjp((g, aux_ct))
+
+
+_op.defvjp(_fwd, _bwd)
+
+
+def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
+               lora_cfg: lora.LoRAConfig, interpret: bool = True
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    out, aux = _op(x, p, cfg, lora_cfg, interpret)
+    return (out[0] if squeeze else out), aux

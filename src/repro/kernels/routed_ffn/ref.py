@@ -1,0 +1,24 @@
+"""Oracle for the grouped-GEMM routed FFN kernel."""
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routed_ffn import ACTIVATIONS
+
+
+def grouped_ffn_ref(xg: jax.Array, w_inner: jax.Array, w_outer: jax.Array,
+                    w_gate: Optional[jax.Array] = None,
+                    act: str = "relu") -> jax.Array:
+    """xg: (B, G, C, d) -> (B, G, C, d); pure-jnp einsum form."""
+    fn = ACTIVATIONS[act]
+    up = jnp.einsum("bgcd,gdf->bgcf", xg.astype(jnp.float32),
+                    w_inner.astype(jnp.float32))
+    if w_gate is not None:
+        gate = jnp.einsum("bgcd,gdf->bgcf", xg.astype(jnp.float32),
+                          w_gate.astype(jnp.float32))
+        h = fn(gate) * up
+    else:
+        h = fn(up)
+    y = jnp.einsum("bgcf,gfd->bgcd", h, w_outer.astype(jnp.float32))
+    return y.astype(xg.dtype)

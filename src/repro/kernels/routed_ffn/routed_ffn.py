@@ -1,0 +1,152 @@
+"""Blocked grouped-GEMM kernel — the TPU form of the paper's BSpMV (§5.2).
+
+The paper iterates over weight blocks, gathers the tokens that activated
+each block, and runs one dense GEMM per block on its own CUDA stream.  Here
+the (B, G, C, d) capacity-bucketed token buffer (core/dispatch.py) is the
+batching; the kernel fuses both projections per block —
+
+    y[b, g] = act(x[b, g] @ W_I[g] (+ LoRA)) @ W_O[g] (+ LoRA)
+
+— optionally gated (GeGLU/SwiGLU), with the FFN hidden dim tiled so each
+weight column slab streams through VMEM once while a (Tc, d) f32
+accumulator carries partial y.  LoRA rides inside the kernel as rank-r
+side-matmuls so the fused op is exactly the fine-tuned layer.
+
+Grid: (B, G, C/Tc, F/Tf), F minor.  VMEM @ defaults (Tc=128, Tf=256,
+d<=6144): x 3.1 MB + weight slabs 2-3 x 3.1 MB bf16 + acc 3.1 MB < 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.topl_select.topl_select import vmem
+
+_ACTS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu}
+
+
+def _make_kernel(act: str, nft: int, gated: bool, use_lora: bool,
+                 scale: float):
+    def kernel(*refs):
+        i = 0
+        x_ref = refs[i]; i += 1
+        wi_ref = refs[i]; i += 1
+        wg_ref = None
+        if gated:
+            wg_ref = refs[i]; i += 1
+        wo_ref = refs[i]; i += 1
+        li_b = li_c = lg_b = lg_c = lo_b = lo_c = None
+        if use_lora:
+            li_b = refs[i]; i += 1
+            li_c = refs[i]; i += 1
+            if gated:
+                lg_b = refs[i]; i += 1
+                lg_c = refs[i]; i += 1
+            lo_b = refs[i]; i += 1
+            lo_c = refs[i]; i += 1
+        y_ref = refs[i]; i += 1
+        acc_ref = refs[i]; i += 1
+        hb_ref = refs[i] if use_lora else None
+
+        fi = pl.program_id(3)
+
+        @pl.when(fi == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            if hb_ref is not None:
+                hb_ref[...] = jnp.zeros_like(hb_ref)
+
+        x = x_ref[0, 0].astype(jnp.float32)              # (Tc, d)
+        f32 = jnp.float32
+        dot = lambda a, b: jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+        up = dot(x, wi_ref[0].astype(f32))               # (Tc, Tf)
+        if use_lora:
+            xb = dot(x, li_b[...].astype(f32))           # (Tc, r)
+            up = up + scale * dot(xb, li_c[0].astype(f32))
+        if gated:
+            gate = dot(x, wg_ref[0].astype(f32))
+            if use_lora:
+                xbg = dot(x, lg_b[...].astype(f32))
+                gate = gate + scale * dot(xbg, lg_c[0].astype(f32))
+            h = _ACTS[act](gate) * up
+        else:
+            h = _ACTS[act](up)
+        acc_ref[...] += dot(h, wo_ref[0].astype(f32))
+        if use_lora:
+            hb_ref[...] += dot(h, lo_b[0].astype(f32))   # (Tc, r)
+
+        @pl.when(fi == nft - 1)
+        def _finish():
+            y = acc_ref[...]
+            if use_lora:
+                y = y + scale * jax.lax.dot_general(
+                    hb_ref[...], lo_c[...].astype(f32),
+                    (((1,), (0,)), ((), ())), preferred_element_type=f32)
+            y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    return kernel
+
+
+def grouped_ffn_kernel(xg: jax.Array, w_inner: jax.Array, w_outer: jax.Array,
+                       w_gate: Optional[jax.Array] = None,
+                       lora_params: Optional[dict] = None,
+                       lora_scale: float = 1.0, *,
+                       act: str = "relu", tile_c: int = 128,
+                       tile_f: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    """xg: (B, G, C, d); w_inner: (G, d, F); w_outer: (G, F, d).
+
+    lora_params (optional): {"lora_inner": {b (d,r), c (G,r,F)},
+    ["lora_gate": ...,] "lora_outer": {b (G,F,r), c (r,d)}}.
+    """
+    b, g, c, d = xg.shape
+    _, _, f = w_inner.shape
+    tc = min(tile_c, c)
+    if c % tc:
+        tc = c
+    tf = min(tile_f, f)
+    if f % tf:
+        tf = f
+    nft = f // tf
+    gated = w_gate is not None
+    use_lora = lora_params is not None
+    grid = (b, g, c // tc, nft)
+    x_spec = pl.BlockSpec((1, 1, tc, d), lambda bi, gi, ci, fi: (bi, gi, ci, 0))
+    wi_spec = pl.BlockSpec((1, d, tf), lambda bi, gi, ci, fi: (gi, 0, fi))
+    wo_spec = pl.BlockSpec((1, tf, d), lambda bi, gi, ci, fi: (gi, fi, 0))
+    y_spec = pl.BlockSpec((1, 1, tc, d), lambda bi, gi, ci, fi: (bi, gi, ci, 0))
+    inputs = [xg, w_inner]
+    in_specs = [x_spec, wi_spec]
+    if gated:
+        inputs.append(w_gate)
+        in_specs.append(wi_spec)
+    inputs.append(w_outer)
+    in_specs.append(wo_spec)
+    scratch = [vmem((tc, d), jnp.float32)]
+    if use_lora:
+        li = lora_params["lora_inner"]
+        r = li["b"].shape[-1]
+        b_in_spec = pl.BlockSpec((d, r), lambda bi, gi, ci, fi: (0, 0))
+        c_in_spec = pl.BlockSpec((1, r, tf), lambda bi, gi, ci, fi: (gi, 0, fi))
+        inputs += [li["b"], li["c"]]
+        in_specs += [b_in_spec, c_in_spec]
+        if gated:
+            lg = lora_params["lora_gate"]
+            inputs += [lg["b"], lg["c"]]
+            in_specs += [b_in_spec, c_in_spec]
+        lo = lora_params["lora_outer"]
+        b_out_spec = pl.BlockSpec((1, tf, r), lambda bi, gi, ci, fi: (gi, fi, 0))
+        c_out_spec = pl.BlockSpec((r, d), lambda bi, gi, ci, fi: (0, 0))
+        inputs += [lo["b"], lo["c"]]
+        in_specs += [b_out_spec, c_out_spec]
+        scratch.append(vmem((tc, r), jnp.float32))
+    kernel = _make_kernel(act, nft, gated, use_lora, lora_scale)
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, c, d), xg.dtype),
+        scratch_shapes=scratch, interpret=interpret)(*inputs)

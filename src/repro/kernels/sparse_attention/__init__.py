@@ -1,0 +1,1 @@
+from repro.kernels.sparse_attention.ops import sparse_mha  # noqa: F401

@@ -1,0 +1,95 @@
+"""Public fused sparse MHA op: Pallas forward, ref (jnp) backward.
+
+Forward = pq_assign kernel + bucket-histogram kernel + fused attention
+kernel.  Backward differentiates the reference implementation, which selects
+the identical top-L set (same integer thresholds and tie rule), so the
+gradient is consistent with the fused forward up to float associativity —
+the same contract the paper's unit tests check (§A.2, Figure 11).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_attention as sa
+from repro.kernels.pq_quantize.ops import pq_assign
+from repro.kernels.sparse_attention.sparse_attention import \
+    sparse_attention_kernel
+from repro.kernels.topl_select.topl_select import topl_thresholds_kernel
+
+
+def _fused_forward(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
+                   scale, causal, window, q_offset, interpret):
+    b, hq, nq, dh = q.shape
+    _, hk, nk, _ = k.shape
+    r = hq // hk
+    l = sa.top_l(nk, cfg, window)
+    codes_q = pq_assign(q, codebooks, interpret=interpret)
+    codes_k = pq_assign(k, codebooks, interpret=interpret)
+    qf = q.reshape(b * hq, nq, dh)
+    kf = k.reshape(b * hk, nk, dh)
+    vf = v.reshape(b * hk, nk, dh)
+    cqf = codes_q.reshape(b * hq, nq, -1)
+    ckf = codes_k.reshape(b * hk, nk, -1)
+
+    def kv_map(g):  # q group (b*Hq + h) -> kv group (b*Hk + h // r)
+        return (g // hq) * hk + (g % hq) // r
+
+    # PQ codes per q-head against its kv head's codes -> thresholds
+    ck_for_q = jnp.repeat(codes_k, r, axis=1).reshape(b * hq, nk, -1)
+    thr = topl_thresholds_kernel(
+        cqf, ck_for_q, l=l, max_score=cfg.pq.num_books, causal=causal,
+        window=window, q_offset=q_offset, tile_q=min(cfg.chunk_q, nq),
+        interpret=interpret)
+    out = sparse_attention_kernel(
+        qf, kf, vf, cqf, ckf, thr, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, kv_map=kv_map, tile_q=min(cfg.chunk_q, nq),
+        interpret=interpret)
+    return out.reshape(b, hq, nq, dh)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _sparse_mha_op(q, k, v, codebooks, cfg, scale, causal, window, q_offset,
+                   interpret):
+    return _fused_forward(q, k, v, codebooks, cfg, scale, causal, window,
+                          q_offset, interpret)
+
+
+def _fwd(q, k, v, codebooks, cfg, scale, causal, window, q_offset, interpret):
+    out = _fused_forward(q, k, v, codebooks, cfg, scale, causal, window,
+                         q_offset, interpret)
+    return out, (q, k, v, codebooks)
+
+
+def _bwd(cfg, scale, causal, window, q_offset, interpret, res, g):
+    q, k, v, codebooks = res
+
+    def ref(q_, k_, v_, cb_):
+        out, _ = sa.sparse_mha(q_, k_, v_, cb_, cfg, scale, causal=causal,
+                               window=window, q_offset=q_offset)
+        return out
+
+    _, vjp = jax.vjp(ref, q, k, v, codebooks)
+    return vjp(g)
+
+
+_sparse_mha_op.defvjp(_fwd, _bwd)
+
+
+def sparse_mha(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
+               scale: float, causal: bool = True,
+               window: Optional[int] = None, q_offset: int = 0,
+               interpret: bool = True
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Drop-in replacement for core.sparse_attention.sparse_mha."""
+    out = _sparse_mha_op(q, k, v, codebooks, cfg, scale, causal, window,
+                         q_offset, interpret)
+    aux = {"l": jnp.asarray(sa.top_l(k.shape[2], cfg, window), jnp.int32)}
+    if cfg.qerr_loss_weight > 0:
+        from repro.core import pq as pq_core
+        aux["qerr"] = (pq_core.quantization_error(q, codebooks)
+                       + pq_core.quantization_error(k, codebooks))
+    return out, aux

@@ -1,0 +1,16 @@
+"""Oracle for the fused sparse-attention kernel: the validated jnp path
+(PQ assign -> bucket_select -> gather attention), restricted to identical
+selection semantics (same thresholds, most-recent-ties-first)."""
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core import sparse_attention as sa
+
+
+def sparse_mha_ref(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
+                   scale: float, causal: bool = True,
+                   window: Optional[int] = None, q_offset: int = 0
+                   ) -> Tuple[jax.Array, dict]:
+    return sa.sparse_mha(q, k, v, codebooks, cfg, scale, causal=causal,
+                         window=window, q_offset=q_offset)

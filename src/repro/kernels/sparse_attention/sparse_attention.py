@@ -1,0 +1,160 @@
+"""Fused sparse MHA kernel: SDDMM -> masked softmax -> SpMM in one pass
+(paper §5.1), reshaped for the TPU memory hierarchy.
+
+The GPU implementation materializes a CSR attention matrix and calls
+cuSPARSE SDDMM/SpMM.  On TPU we fuse *through the selection*: for each
+(Tq) query tile the kernel streams (Tk) key/value tiles through VMEM —
+newest tile first — computes the integer PQ match scores in VREGs, masks
+to the top-L-eligible set using the per-query [threshold, tie-budget] from
+the bucket-histogram kernel, and folds the surviving logits into an online
+(flash-style) softmax accumulator.  Neither the (n, L) index matrix nor any
+gathered K/V copy ever exists: HBM traffic is O(n d) per query tile instead
+of O(n L d) for the gather formulation (the measured ~60x memory-term gap
+in EXPERIMENTS.md §Perf).
+
+Key-tile skip: a tile with no eligible pair skips its MXU work via pl.when
+— with top-1/8 sparsity most off-diagonal tiles skip, which is where the
+FLOP-side win appears on real hardware.
+
+Grid: (G, nq/Tq, nk/Tk) with the key axis minor (sequential) and REVERSED
+so the most-recent-ties-first budget is consumed in order.
+Scratch (VMEM, f32): m (Tq,1), l (Tq,1), acc (Tq, dh), ties taken (Tq,1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.topl_select.topl_select import vmem
+
+
+def _scores(cq, ck):
+    m = cq.shape[1]
+    s = jnp.zeros((cq.shape[0], ck.shape[0]), jnp.int32)
+    for i in range(m):
+        s = s + (cq[:, i][:, None] == ck[:, i][None, :]).astype(jnp.int32)
+    return s
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, thr_ref, o_ref,
+                 m_ref, l_ref, acc_ref, tie_ref, *,
+                 scale, causal, window, q_offset, tq, tk, nkt):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)                 # 0 .. nkt-1, tiles visited newest->oldest
+    ki = nkt - 1 - kj                     # actual key-tile index
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        tie_ref[...] = jnp.zeros_like(tie_ref)
+
+    cq = cq_ref[0]
+    ck = ck_ref[0]
+    s = _scores(cq, ck)                   # (Tq, Tk) int32
+    q_pos = q_offset + qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq,), 0)
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tk,), 0)
+    valid = jnp.ones((tq, tk), bool)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    thr = thr_ref[0]                      # (Tq, 2)
+    t = thr[:, 0][:, None]
+    need = thr[:, 1][:, None]
+    sm = jnp.where(valid, s, -1)
+    above = sm > t
+    at_t = sm == t
+    # ties more recent than position b: taken so far + ties right of b in tile
+    rev_incl = jnp.cumsum(at_t[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
+    rev_excl = rev_incl - at_t.astype(jnp.int32)
+    taken = tie_ref[:, 0][:, None]
+    elig_t = at_t & ((taken + rev_excl) < need)
+    eligible = above | elig_t
+    tie_ref[:, 0] += jnp.sum(elig_t.astype(jnp.int32), axis=1)
+
+    @pl.when(jnp.any(eligible))
+    def _block():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (Tq, Tk)
+        logits = jnp.where(eligible, logits, -jnp.inf)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        finite = m_new > -jnp.inf
+        m_safe = jnp.where(finite, m_new, 0.0)
+        alpha = jnp.where(finite, jnp.exp(m_prev - m_safe), 1.0)
+        p = jnp.where(finite[:, None], jnp.exp(logits - m_safe[:, None]), 0.0)
+        p = jnp.where(eligible, p, 0.0)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_new
+
+    @pl.when(kj == nkt - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def sparse_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                            codes_q: jax.Array, codes_k: jax.Array,
+                            thresholds: jax.Array, *, scale: float,
+                            causal: bool, window: Optional[int],
+                            q_offset: int = 0, kv_map=None,
+                            tile_q: int = 256, tile_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (Gq, nq, dh); k/v/codes_k: (Gk, nk, ...); thresholds: (Gq, nq, 2).
+
+    kv_map: callable mapping a q-group index -> kv-group index (GQA);
+    identity if None.
+    """
+    gq, nq, dh = q.shape
+    gk, nk, _ = k.shape
+    m = codes_q.shape[-1]
+    tq = min(tile_q, nq)
+    if nq % tq:
+        tq = nq
+    tk = min(tile_k, nk)
+    if nk % tk:
+        tk = nk
+    nkt = nk // tk
+    kvm = kv_map if kv_map is not None else (lambda g: g)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, tq=tq, tk=tk, nkt=nkt)
+    return pl.pallas_call(
+        kernel,
+        grid=(gq, nq // tq, nkt),
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda g, qi, kj: (g, qi, 0)),
+            pl.BlockSpec((1, tk, dh),
+                         lambda g, qi, kj: (kvm(g), nkt - 1 - kj, 0)),
+            pl.BlockSpec((1, tk, dh),
+                         lambda g, qi, kj: (kvm(g), nkt - 1 - kj, 0)),
+            pl.BlockSpec((1, tq, m), lambda g, qi, kj: (g, qi, 0)),
+            pl.BlockSpec((1, tk, m),
+                         lambda g, qi, kj: (kvm(g), nkt - 1 - kj, 0)),
+            pl.BlockSpec((1, tq, 2), lambda g, qi, kj: (g, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda g, qi, kj: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((gq, nq, dh), q.dtype),
+        scratch_shapes=[
+            vmem((tq, 1), jnp.float32),
+            vmem((tq, 1), jnp.float32),
+            vmem((tq, dh), jnp.float32),
+            vmem((tq, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, k, v, codes_q, codes_k, thresholds)

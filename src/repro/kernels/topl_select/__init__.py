@@ -1,0 +1,1 @@
+from repro.kernels.topl_select.ops import topl_select, topl_thresholds  # noqa

@@ -1,0 +1,69 @@
+"""Public wrappers: threshold kernel + jnp binary-search index emission.
+
+The fused attention kernel consumes thresholds directly (no indices ever
+materialize).  ``topl_select`` — thresholds from the Pallas kernel, then the
+sort-free compaction — exists for the decode path and for parity tests
+against the CSR-index formulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_attention as sa
+from repro.kernels.topl_select.topl_select import topl_thresholds_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "l", "max_score", "causal", "window", "q_offset", "interpret"))
+def topl_thresholds(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
+                    max_score: int, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    interpret: bool = True) -> jax.Array:
+    return topl_thresholds_kernel(
+        codes_q, codes_k, l=l, max_score=max_score, causal=causal,
+        window=window, q_offset=q_offset, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "l", "max_score", "causal", "window", "q_offset", "interpret"))
+def topl_select(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
+                max_score: int, causal: bool = True,
+                window: Optional[int] = None, q_offset: int = 0,
+                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """(G, nq, M) x (G, nk, M) -> indices (G, nq, L), valid (G, nq, L)."""
+    thr = topl_thresholds(codes_q, codes_k, l=l, max_score=max_score,
+                          causal=causal, window=window, q_offset=q_offset,
+                          interpret=interpret)
+    g, nq, m = codes_q.shape
+    nk = codes_k.shape[1]
+    s = jnp.sum(
+        (codes_q[:, :, None, :] == codes_k[:, None, :, :]).astype(jnp.int32),
+        axis=-1)
+    q_pos = q_offset + jnp.arange(nq, dtype=jnp.int32)
+    k_pos = jnp.arange(nk, dtype=jnp.int32)
+    valid = sa.attention_mask(q_pos, k_pos, causal, window)[None]
+    t = thr[..., 0:1]
+    need = thr[..., 1:2]
+    sm = jnp.where(valid, s, -1)
+    above = sm > t
+    at_t = sm == t
+    rev_rank = jnp.cumsum(at_t[..., ::-1].astype(jnp.int32),
+                          axis=-1)[..., ::-1]
+    eligible = above | (at_t & (rev_rank <= need))
+    cs = jnp.cumsum(eligible.astype(jnp.int32), axis=-1)
+    n_sel = cs[..., -1]
+    targets = jnp.arange(1, l + 1, dtype=jnp.int32)
+    lo = jnp.zeros((g, nq, l), jnp.int32)
+    hi = jnp.full_like(lo, nk)
+    for _ in range(max(1, nk.bit_length())):
+        mid = (lo + hi) // 2
+        cs_mid = jnp.take_along_axis(cs, jnp.minimum(mid, nk - 1), axis=-1)
+        go_right = cs_mid < targets
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    idx = jnp.minimum(lo, nk - 1)
+    return idx, targets <= n_sel[..., None]

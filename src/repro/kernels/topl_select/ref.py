@@ -1,0 +1,46 @@
+"""Oracle for top-L selection: the validated bucket_select from core
+(set-equivalent to sort-based select_topl; see tests)."""
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq
+from repro.core import sparse_attention as sa
+
+
+def thresholds_ref(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
+                   max_score: int, causal: bool, window: Optional[int],
+                   q_offset: int = 0) -> jax.Array:
+    """(G, nq, M), (G, nk, M) -> (G, nq, 2) [threshold bucket, tie budget]."""
+    g, nq, m = codes_q.shape
+    nk = codes_k.shape[1]
+    # direct integer compare (exact, any E)
+    s = jnp.sum(
+        (codes_q[:, :, None, :] == codes_k[:, None, :, :]).astype(jnp.int32),
+        axis=-1)                                        # (G, nq, nk)
+    q_pos = q_offset + jnp.arange(nq, dtype=jnp.int32)
+    k_pos = jnp.arange(nk, dtype=jnp.int32)
+    valid = sa.attention_mask(q_pos, k_pos, causal, window)[None]
+    sm = jnp.where(valid, s, -1)
+    counts = jnp.stack([jnp.sum((sm == v).astype(jnp.int32), axis=-1)
+                        for v in range(max_score + 1)], axis=-1)
+    ge = jnp.cumsum(counts[..., ::-1], axis=-1)[..., ::-1]
+    t = jnp.maximum(jnp.sum((ge >= l).astype(jnp.int32), axis=-1) - 1, 0)
+    ge_pad = jnp.concatenate([ge, jnp.zeros_like(ge[..., :1])], axis=-1)
+    n_above = jnp.take_along_axis(ge_pad, (t + 1)[..., None], axis=-1)[..., 0]
+    return jnp.stack([t, l - n_above], axis=-1).astype(jnp.int32)
+
+
+def topl_select_ref(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
+                    max_score: int, causal: bool, window: Optional[int],
+                    q_offset: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Full index emission via core.bucket_select (binary-search compaction)."""
+    s = jnp.sum(
+        (codes_q[:, :, None, :] == codes_k[:, None, :, :]).astype(jnp.int32),
+        axis=-1).astype(jnp.float32)
+    nq, nk = s.shape[1], s.shape[2]
+    q_pos = q_offset + jnp.arange(nq, dtype=jnp.int32)
+    k_pos = jnp.arange(nk, dtype=jnp.int32)
+    valid = sa.attention_mask(q_pos, k_pos, causal, window)[None]
+    return sa.bucket_select(s, valid, l, max_score)

@@ -1,0 +1,113 @@
+"""Streaming bucket-threshold kernel — paper Algorithm 3 on TPU.
+
+The paper's bucket sort puts each key into one of M+1 integer-score buckets
+(shared memory, thread-per-query) and reads buckets high-to-low until L keys
+are collected.  The TPU form computes, for a (Tq) tile of queries, the
+per-query score *histogram* by streaming (Tk) key-code tiles through VMEM,
+then derives the equivalent of "where reading stops": the threshold bucket
+``t`` and the residual tie budget ``need`` (# keys to take at score == t,
+most recent first).  Downstream consumers (the fused attention kernel, or
+the jnp emit step) never sort anything.
+
+Grid: (G, nq/Tq, nk/Tk), key axis minor => the histogram scratch carries
+across key tiles.  VMEM: codes tiles (Tq+Tk) x M int32 + hist (Tq, M+1).
+Output: (G, nq, 2) int32 = [t, need] per query.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scores(cq, ck):
+    """(Tq, M) x (Tk, M) -> (Tq, Tk) int32 match counts (Eq. 6)."""
+    m = cq.shape[1]
+    s = jnp.zeros((cq.shape[0], ck.shape[0]), jnp.int32)
+    for i in range(m):
+        s = s + (cq[:, i][:, None] == ck[:, i][None, :]).astype(jnp.int32)
+    return s
+
+
+def _mask(q_pos, k_pos, causal, window):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _hist_kernel(cq_ref, ck_ref, thr_ref, hist_ref, *, max_score, l,
+                 causal, window, q_offset, tq, tk, nkt):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    cq = cq_ref[0]
+    ck = ck_ref[0]
+    s = _scores(cq, ck)
+    q_pos = q_offset + qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq,), 0)
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tk,), 0)
+    valid = _mask(q_pos, k_pos, causal, window)
+    sm = jnp.where(valid, s, -1)
+    for v in range(max_score + 1):
+        hist_ref[:, v] += jnp.sum((sm == v).astype(jnp.int32), axis=1)
+
+    @pl.when(ki == nkt - 1)
+    def _finish():
+        hist = hist_ref[...]                          # (Tq, M+1)
+        # ge[v] = #keys with score >= v  (suffix sums, small static loop)
+        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
+        meets = (ge >= l).astype(jnp.int32)
+        t = jnp.maximum(jnp.sum(meets, axis=1) - 1, 0)
+        ge_pad = jnp.concatenate(
+            [ge, jnp.zeros((hist.shape[0], 1), jnp.int32)], axis=1)
+        n_above = jnp.take_along_axis(ge_pad, (t + 1)[:, None], axis=1)[:, 0]
+        need = l - n_above
+        thr_ref[0] = jnp.stack([t, need], axis=1).astype(jnp.int32)
+
+
+def topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array, *,
+                           l: int, max_score: int, causal: bool,
+                           window: Optional[int], q_offset: int = 0,
+                           tile_q: int = 256, tile_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """codes_q: (G, nq, M); codes_k: (G, nk, M) -> (G, nq, 2) [t, need]."""
+    g, nq, m = codes_q.shape
+    _, nk, _ = codes_k.shape
+    tq = min(tile_q, nq)
+    if nq % tq:
+        tq = nq
+    tk = min(tile_k, nk)
+    if nk % tk:
+        tk = nk
+    nkt = nk // tk
+    grid = (g, nq // tq, nkt)
+    kernel = functools.partial(
+        _hist_kernel, max_score=max_score, l=l, causal=causal, window=window,
+        q_offset=q_offset, tq=tq, tk=tk, nkt=nkt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, m), lambda gi, qi, ki: (gi, qi, 0)),
+            pl.BlockSpec((1, tk, m), lambda gi, qi, ki: (gi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, 2), lambda gi, qi, ki: (gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, nq, 2), jnp.int32),
+        scratch_shapes=[vmem((tq, max_score + 1), jnp.int32)],
+        interpret=interpret,
+    )(codes_q, codes_k)
+
+
+def vmem(shape, dtype):
+    """VMEM scratch allocation (works under interpret=True on CPU too)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

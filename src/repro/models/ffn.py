@@ -1,0 +1,72 @@
+"""FFN layer: dense (Full/LoRA baseline) or the paper's routed FFN."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lora, routed_ffn
+from repro.core.params import ParamDef
+from repro.models.layers import norm_defs
+from repro.sharding import shard
+
+
+def _routed_cfg(cfg: ModelConfig) -> routed_ffn.RoutedFFNConfig:
+    return routed_ffn.RoutedFFNConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff,
+        num_groups=cfg.spt.ffn_groups,
+        active_groups=cfg.spt.ffn_active_groups,
+        capacity_factor=cfg.spt.ffn_capacity_factor,
+        capacity_pad=cfg.spt.dispatch_pad,
+        activation=cfg.activation, gated=cfg.gated_ffn,
+        lb_loss_weight=cfg.spt.lb_loss_weight)
+
+
+def routed_applicable(cfg: ModelConfig) -> bool:
+    return (cfg.spt.routed_ffn and cfg.d_ff > 0
+            and cfg.d_ff % cfg.spt.ffn_groups == 0)
+
+
+def ffn_defs(cfg: ModelConfig) -> dict:
+    lc = cfg.spt.lora
+    if routed_applicable(cfg):
+        return routed_ffn.param_defs(_routed_cfg(cfg), lc)
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "wi": lora.linear_defs(d, f, lc, "embed", "ffn"),
+        "wo": lora.linear_defs(f, d, lc, "ffn", "embed"),
+    }
+    if cfg.gated_ffn:
+        defs["wg"] = lora.linear_defs(d, f, lc, "embed", "ffn")
+    return defs
+
+
+def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, dict]:
+    lc = cfg.spt.lora
+    if routed_applicable(cfg):
+        rcfg = _routed_cfg(cfg)
+        if cfg.spt.ffn_impl == "grouped_shmap":
+            from repro.core import ffn_shmap
+            from repro.sharding import current_rules
+            rules = current_rules() or {}
+            mesh = rules.get("__mesh__")
+            if x.ndim == 3 and ffn_shmap.applicable(
+                    mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0]):
+                return ffn_shmap.routed_ffn_shmap(x, p, rcfg, lc, mesh)
+            y, aux = routed_ffn.routed_ffn(x, p, rcfg, lc, impl="grouped")
+            return y, aux
+        y, aux = routed_ffn.routed_ffn(x, p, rcfg, lc, impl=cfg.spt.ffn_impl)
+        return y, aux
+    act = routed_ffn.ACTIVATIONS[cfg.activation]
+    up = lora.linear(x, p["wi"], lc)
+    up = shard(up, "batch", None, "ffn")
+    if cfg.gated_ffn:
+        gate = lora.linear(x, p["wg"], lc)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    y = lora.linear(h, p["wo"], lc)
+    return shard(y, "batch", None, None), {}

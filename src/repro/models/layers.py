@@ -1,0 +1,72 @@
+"""Shared neural building blocks: norms, RoPE, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import ParamDef
+
+
+# ---------------------------------------------------------------- norms
+def norm_defs(dim: int, kind: str, axis: Optional[str] = "embed") -> dict:
+    defs = {"scale": ParamDef((dim,), jnp.float32, (axis,), init="ones",
+                              trainable=False)}
+    if kind == "layernorm":
+        defs["bias"] = ParamDef((dim,), jnp.float32, (axis,), init="zeros",
+                                trainable=False)
+    return defs
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, head_dim); pos: (seq,) or broadcastable absolute positions.
+    LLaMA-style rotate-half."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    angles = pos[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_defs(vocab: int, dim: int) -> dict:
+    return {"embedding": ParamDef((vocab, dim), jnp.bfloat16,
+                                  ("vocab", "embed"), init="normal:0.02",
+                                  trainable=False)}
+
+
+def embed_lookup(p: dict, tokens: jax.Array, scale: bool,
+                 d_model: int) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(d_model ** 0.5, x.dtype)
+    return x
+
+
+def pos_embed_defs(max_pos: int, dim: int) -> dict:
+    return {"pos_embedding": ParamDef((max_pos, dim), jnp.bfloat16,
+                                      (None, "embed"), init="normal:0.02",
+                                      trainable=False)}

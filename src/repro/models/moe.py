@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN (grok-1 / mixtral style: softmax top-2 of E).
+
+Reuses the capacity-bucketed, per-sequence dispatch engine
+(core/dispatch.py) that also implements the paper's routed FFN — the two
+are the same mechanism at different granularity (DESIGN.md
+§Arch-applicability).  Expert FFN hidden dims are sharded on the "model"
+mesh axis; experts themselves are replicated so routing stays local (no
+all-to-all in the baseline; an EP variant is a hillclimb option).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import dispatch, lora
+from repro.core.params import ParamDef
+from repro.core.routed_ffn import ACTIVATIONS
+from repro.sharding import shard
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    lc = cfg.spt.lora
+    defs = {
+        "router": ParamDef((d, e), jnp.float32, ("embed", "expert"),
+                           init="fan_in", trainable=True),
+        "wi": ParamDef((e, d, f), jnp.bfloat16,
+                       ("expert", "embed", "expert_ffn"),
+                       init="fan_in", trainable=False),
+        "wo": ParamDef((e, f, d), jnp.bfloat16,
+                       ("expert", "expert_ffn", "embed"),
+                       init="fan_in", trainable=False),
+    }
+    if cfg.gated_ffn:
+        defs["wg"] = ParamDef((e, d, f), jnp.bfloat16,
+                              ("expert", "embed", "expert_ffn"),
+                              init="fan_in", trainable=False)
+    if lc.enabled:
+        r = lc.rank
+        defs["lora_wi"] = {
+            "b": ParamDef((d, r), jnp.float32, ("embed", "lora_rank"),
+                          init="fan_in", trainable=True),
+            "c": ParamDef((e, r, f), jnp.float32,
+                          ("expert", "lora_rank", "expert_ffn"),
+                          init="zeros", trainable=True)}
+        defs["lora_wo"] = {
+            "b": ParamDef((e, f, r), jnp.float32,
+                          ("expert", "expert_ffn", "lora_rank"),
+                          init="fan_in", trainable=True),
+            "c": ParamDef((r, d), jnp.float32, ("lora_rank", "embed"),
+                          init="zeros", trainable=True)}
+        if cfg.gated_ffn:
+            defs["lora_wg"] = {
+                "b": ParamDef((d, r), jnp.float32, ("embed", "lora_rank"),
+                              init="fan_in", trainable=True),
+                "c": ParamDef((e, r, f), jnp.float32,
+                              ("expert", "lora_rank", "ffn"), init="zeros",
+                              trainable=True)}
+    return defs
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, aux)."""
+    lc = cfg.spt.lora
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)   # renormalize top-k
+    cap = dispatch.capacity(s, e, k, cfg.moe_capacity_factor,
+                            pad=cfg.spt.dispatch_pad)
+    plan = dispatch.make_plan(choice.astype(jnp.int32), gate, e, cap)
+    xg = dispatch.gather(x, plan)                        # (B, E, C, d)
+    xg = shard(xg, "batch", None, None, None)
+
+    def proj_in(w_key, lora_key):
+        w = jax.lax.stop_gradient(p[w_key]).astype(x.dtype)
+        up = jnp.einsum("becd,edf->becf", xg, w)
+        if lc.enabled and lora_key in p:
+            li = p[lora_key]
+            xb = jnp.einsum("becd,dr->becr", xg, li["b"].astype(x.dtype))
+            up = up + lc.scale * jnp.einsum(
+                "becr,erf->becf", xb, li["c"].astype(x.dtype))
+        return up
+
+    act = ACTIVATIONS[cfg.activation]
+    up = proj_in("wi", "lora_wi")
+    if cfg.gated_ffn:
+        h = act(proj_in("wg", "lora_wg")) * up
+    else:
+        h = act(up)
+    h = shard(h, "batch", None, None, "ffn")
+    wo = jax.lax.stop_gradient(p["wo"]).astype(x.dtype)
+    y = jnp.einsum("becf,efd->becd", h, wo)
+    if lc.enabled and "lora_wo" in p:
+        hb = jnp.einsum("becf,efr->becr", h, p["lora_wo"]["b"].astype(x.dtype))
+        y = y + lc.scale * jnp.einsum(
+            "becr,rd->becd", hb, p["lora_wo"]["c"].astype(x.dtype))
+    out = dispatch.combine(y, plan, s).astype(x.dtype)
+    aux = {
+        "lb_loss": dispatch.load_balance_loss(probs, choice, e),
+        "dropped": plan.dropped,
+    }
+    return (out[0] if squeeze else out), aux

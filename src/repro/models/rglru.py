@@ -1,0 +1,146 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+    r_t = sigmoid(x_t W_a)                 (recurrence gate)
+    i_t = sigmoid(x_t W_i)                 (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over time; decode is a single step.
+The r/i gate weights are block-diagonal as in Griffin — and on TPU that is
+also a sharding property: each "model" shard owns whole gate blocks, so the
+gates need no collective (EXPERIMENTS.md §Perf it8).  The paper's sparse
+MHA applies to Griffin's *local attention* layers, not here; LoRA applies
+to all projections in this block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lora
+from repro.core.params import ParamDef
+from repro.sharding import shard
+
+_C = 8.0
+
+
+def _gate_blocks(cfg: ModelConfig) -> int:
+    """Block-diagonal gate count (Griffin's design): 16 when divisible so
+    each model shard owns whole blocks — the gates then need NO collective
+    (§Perf it8); falls back to 1 block (= full matrix) for tiny test dims."""
+    w = cfg.resolved_lru_width
+    return 16 if w % (16 * 8) == 0 else 1
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    nb = _gate_blocks(cfg)
+    wb = w // nb
+    lc = cfg.spt.lora
+    return {
+        "w_gate": lora.linear_defs(d, w, lc, "embed", "lru"),
+        "w_branch": lora.linear_defs(d, w, lc, "embed", "lru"),
+        "w_out": lora.linear_defs(w, d, lc, "lru", "embed"),
+        "conv": ParamDef((cfg.conv_width, w), jnp.float32, ("conv", "lru"),
+                         init="normal:0.1", trainable=False),
+        "w_a": ParamDef((nb, wb, wb), jnp.float32, ("lru_blocks", None, None),
+                        init="fan_in", trainable=False),
+        "w_i": ParamDef((nb, wb, wb), jnp.float32, ("lru_blocks", None, None),
+                        init="fan_in", trainable=False),
+        "lam": ParamDef((w,), jnp.float32, ("lru",), init="uniform:1.0",
+                        trainable=False),
+    }
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along time.  x: (B, S, W); kernel: (K, W).
+    Returns (y, new_state) where state carries the last K-1 inputs."""
+    k = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return y, new_state
+
+
+def _gates(p: dict, xc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = xc.astype(jnp.float32)
+    nb, wb, _ = p["w_a"].shape
+    lead = xf.shape[:-1]
+    xb = xf.reshape(*lead, nb, wb)
+    # block-diagonal gates: contraction stays within a block, so a model
+    # shard owning whole blocks computes its gates with zero collectives
+    r = jax.nn.sigmoid(jnp.einsum("...nw,nwv->...nv", xb, p["w_a"])
+                       ).reshape(*lead, nb * wb)
+    i = jax.nn.sigmoid(jnp.einsum("...nw,nwv->...nv", xb, p["w_i"])
+                       ).reshape(*lead, nb * wb)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p: dict, xc: jax.Array,
+               h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    xc: (B, S, W) post-conv branch input.  Returns (h_seq, h_last)."""
+    a, b = _gates(p, xc)
+    if h0 is not None:  # fold initial state into step 0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p: dict, xc: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  xc: (B, W); h: (B, W)."""
+    a, b = _gates(p, xc[:, None, :])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new, h_new
+
+
+def rec_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              mode: str = "train",
+              cache: Optional[dict] = None
+              ) -> Tuple[jax.Array, Optional[dict], dict]:
+    """Griffin recurrent block.  x: (B, S, d)."""
+    lc = cfg.spt.lora
+    gate = jax.nn.gelu(lora.linear(x, p["w_gate"], lc))
+    branch = lora.linear(x, p["w_branch"], lc)
+    branch = shard(branch, "batch", None, "lru")
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(branch, p["conv"], conv_state)
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        h_seq, h_last = rglru_scan(p, xc, None if cache is None else cache["h"])
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": new_conv.astype(jnp.float32)}
+        out = h_seq.astype(x.dtype)
+    elif mode == "decode":
+        assert cache is not None
+        h_new, _ = rglru_step(p, xc[:, 0], cache["h"])
+        new_cache = {"h": h_new, "conv": new_conv.astype(jnp.float32)}
+        out = h_new[:, None, :].astype(x.dtype)
+    else:
+        raise ValueError(mode)
+    y = lora.linear(out * gate, p["w_out"], lc)
+    return shard(y, "batch", None, None), new_cache, {}

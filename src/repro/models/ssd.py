@@ -1,0 +1,187 @@
+"""Mamba-2 block via SSD (state-space duality), chunked matmul form.
+
+The chunked dual form keeps training compute on the MXU:
+  * intra-chunk: (Q x Q) masked-decay attention-like matmuls
+  * inter-chunk: per-chunk states carried by a short lax.scan
+
+Decode is the O(1) recurrent update  h <- h * exp(dt A) + dt B (x)  ;
+y = C h + D x.
+
+SPT applicability (DESIGN.md §Arch-applicability): mamba2 is attention-free
+and has no FFN (d_ff = 0), so sparse MHA and routed FFN are inapplicable —
+SPT degenerates to LoRA on in/out projections.  This module still carries
+full LoRA support so the arch participates in the fine-tuning framework.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lora
+from repro.core.params import ParamDef
+from repro.models.layers import apply_norm, norm_defs
+from repro.sharding import shard
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_dim = di + 2 * n
+    proj_out = 2 * di + 2 * n + h   # z, x, B, C, dt
+    return di, h, n, conv_dim, proj_out
+
+
+def ssd_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, n, conv_dim, proj_out = _dims(cfg)
+    lc = cfg.spt.lora
+    return {
+        "in_proj": lora.linear_defs(d, proj_out, lc, "embed", "ssm_inner"),
+        "out_proj": lora.linear_defs(di, d, lc, "ssm_inner", "embed"),
+        "conv": ParamDef((cfg.conv_width, conv_dim), jnp.float32,
+                         ("conv", None), init="normal:0.1", trainable=False),
+        "a_log": ParamDef((h,), jnp.float32, (None,), init="zeros",
+                          trainable=False),
+        "d_skip": ParamDef((h,), jnp.float32, (None,), init="ones",
+                           trainable=False),
+        "dt_bias": ParamDef((h,), jnp.float32, (None,), init="zeros",
+                            trainable=False),
+        "norm": norm_defs(di, "rmsnorm", None),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, h, n, conv_dim, _ = _dims(cfg)
+    p = cfg.ssm_headdim
+    return {
+        "h": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32),
+    }
+
+
+def _causal_conv(x, kernel, state):
+    k = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+            for i in range(k))
+    return jax.nn.silu(y), xp[:, -(k - 1):]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular exp-arg differences:
+    out[i, j] = sum_{j < t <= i} dA[t]  (=-inf above diagonal)."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # (.., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, chunk: int,
+             h0: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: (B,S,H,P), dt: (B,S,H) (>=0), a: (H,) (<0),
+    bm/cm: (B,S,N).  Returns (y (B,S,H,P), h_last (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    if s % q != 0:
+        q = s
+    nc = s // q
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = bm.reshape(b, nc, q, n)
+    cr = cm.reshape(b, nc, q, n)
+    da = dtr * a[None, None, None, :]                     # (B,NC,Q,H)
+    da_h = jnp.moveaxis(da, -1, 2)                        # (B,NC,H,Q)
+    seg = _segsum(da_h)                                   # (B,NC,H,Q,Q)
+    l_mat = jnp.exp(seg)
+    xdt = xr * dtr[..., None]                             # (B,NC,Q,H,P)
+    # intra-chunk (quadratic within chunk, matmul form)
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br,
+                    preferred_element_type=jnp.float32)   # (B,NC,Q,Q)
+    scores = cb[:, :, None] * l_mat                       # (B,NC,H,Q,Q)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores.astype(x.dtype), xdt)
+    # chunk states
+    da_cs = jnp.cumsum(da, axis=2)                        # (B,NC,Q,H)
+    decay_tail = jnp.exp(da_cs[:, :, -1:, :] - da_cs)     # (B,NC,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", br,
+                        decay_tail.astype(x.dtype), xdt)  # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])             # (B,NC,H)
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None] + st.astype(jnp.float32)
+        return hnew, hprev
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    from repro.core.chunking import maybe_scan
+    h_last, h_prevs = maybe_scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,NC,H,P,N)
+    decay_in = jnp.exp(da_cs)                             # (B,NC,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cr.astype(x.dtype),
+                         decay_in.astype(x.dtype), h_prevs.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_last
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, hst: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  x: (B,H,P), dt: (B,H), bm/cm: (B,N), h: (B,H,P,N)."""
+    da = jnp.exp(dt * a[None, :])[..., None, None]        # (B,H,1,1)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, bm, x)
+    h_new = hst * da + upd.astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", h_new.astype(x.dtype), cm.astype(x.dtype))
+    return y, h_new
+
+
+def ssd_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              mode: str = "train",
+              cache: Optional[dict] = None
+              ) -> Tuple[jax.Array, Optional[dict], dict]:
+    """Mamba-2 block.  x: (B, S, d_model)."""
+    lc = cfg.spt.lora
+    di, h, n, conv_dim, _ = _dims(cfg)
+    phead = cfg.ssm_headdim
+    bsz, s, _ = x.shape
+    zxbcdt = lora.linear(x, p["in_proj"], lc)
+    z, xc, bm, cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    xc, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xc = shard(xc, "batch", None, "ssm_inner")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xc.reshape(bsz, s, h, phead)
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        y, h_last = ssd_scan(xh, dt, a, bm, cm, cfg.ssm_chunk,
+                             None if cache is None else cache["h"])
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": new_conv.astype(jnp.float32)}
+    elif mode == "decode":
+        assert cache is not None
+        y1, h_new = ssd_step(xh[:, 0], dt[:, 0], a, bm[:, 0], cm[:, 0],
+                             cache["h"])
+        new_cache = {"h": h_new, "conv": new_conv.astype(jnp.float32)}
+        y = y1[:, None]
+    else:
+        raise ValueError(mode)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, s, di)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = lora.linear(y, p["out_proj"], lc)
+    return shard(out, "batch", None, None), new_cache, {}

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (OptimizerConfig, adamw_init, adamw_update,  # noqa
+                               global_norm)
+from repro.optim.schedule import lr_at  # noqa: F401
+from repro.optim.compress import (CompressionConfig, compress_tree,  # noqa
+                                  decompress_tree)

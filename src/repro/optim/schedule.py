@@ -1,0 +1,18 @@
+"""Learning-rate schedules (warmup + cosine/linear decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_at(cfg, step):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay

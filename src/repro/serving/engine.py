@@ -1,0 +1,102 @@
+"""Serving: prefill + decode step builders and a batched-request engine.
+
+serve_step semantics for the dry-run cells:
+  prefill_32k  — lower `prefill_step` over (B, S) prompts
+  decode_32k / long_500k — lower `decode_step`: one new token per sequence
+                 against a KV cache of seq_len (the cache is a donated input)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            return encdec.encdec_prefill(params, cfg, batch, max_len)
+    else:
+        def prefill(params, batch):
+            return transformer.lm_prefill(params, cfg, batch, max_len)
+    return prefill
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "audio":
+        def decode(params, caches, token, pos):
+            return encdec.encdec_decode_step(params, cfg, caches, token, pos)
+    else:
+        def decode(params, caches, token, pos):
+            return transformer.lm_decode_step(params, cfg, caches, token, pos)
+    return decode
+
+
+def abstract_decode_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    if cfg.family == "audio":
+        fn = lambda: encdec.init_dec_caches(cfg, batch, cache_len,
+                                            cfg.frontend_tokens)
+    else:
+        fn = lambda: transformer.init_caches(cfg, batch, cache_len)
+    shapes = jax.eval_shape(fn)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), shapes)
+
+
+def decode_cache_axes(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return encdec.cache_axes(cfg)
+    return transformer.cache_axes(cfg)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[List[int]]
+    steps: int
+
+
+class Engine:
+    """Minimal batched serving engine: greedy/temperature sampling over a
+    fixed slot batch; used by examples/serve_batch.py and the benchmarks."""
+
+    def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
+                 jit: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = build_prefill_step(cfg, max_len)
+        self._decode = build_decode_step(cfg)
+        if jit:
+            self._prefill = jax.jit(self._prefill)
+            self._decode = jax.jit(self._decode, donate_argnums=(1,))
+
+    def generate(self, batch: Dict[str, jax.Array], steps: int,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> GenerationResult:
+        caches, logits = self._prefill(self.params, batch)
+        pos0 = batch["tokens"].shape[1]
+        if self.cfg.frontend and self.cfg.family != "audio":
+            pos0 += self.cfg.frontend_tokens
+        outs = []
+        tok = self._sample(logits[:, -1], temperature, key, 0)
+        outs.append(tok)
+        for t in range(1, steps):
+            caches, logits = self._decode(
+                self.params, caches, tok, jnp.asarray(pos0 + t - 1, jnp.int32))
+            tok = self._sample(logits[:, -1], temperature, key, t)
+            outs.append(tok)
+        toks = jnp.stack(outs, axis=1)
+        return GenerationResult(tokens=toks.tolist(), steps=steps)
+
+    def _sample(self, logits, temperature, key, t):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, t)
+        return jax.random.categorical(
+            k, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)

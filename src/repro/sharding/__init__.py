@@ -1,0 +1,2 @@
+from repro.sharding.context import axis_rules, shard, current_rules  # noqa: F401
+from repro.sharding.rules import RULES, rules_for_mesh  # noqa: F401

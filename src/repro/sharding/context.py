@@ -1,0 +1,67 @@
+"""Sharding context: logical-axis activation constraints.
+
+Model code annotates activations with *logical* axis names via ``shard``.
+When a rules context is active (set by the launcher / dry-run around
+tracing), the annotation becomes ``with_sharding_constraint``; otherwise it
+is a no-op, so unit tests and single-device runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec
+
+_RULES: contextvars.ContextVar[Optional[Mapping[str, Any]]] = \
+    contextvars.ContextVar("repro_axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Mapping[str, Any]):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> Optional[Mapping[str, Any]]:
+    return _RULES.get()
+
+
+def _resolve(dim: int, name: Optional[str], rules: Mapping[str, Any],
+             used: set) -> Optional[Union[str, tuple]]:
+    if name is None:
+        return None
+    mesh_axes = rules.get(name)
+    if mesh_axes is None:
+        return None
+    flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+    sizes = rules.get("__sizes__", {})
+    total = 1
+    for a in flat:
+        total *= int(sizes.get(a, 1))
+    if total <= 0 or dim % total != 0 or any(a in used for a in flat):
+        return None
+    used.update(flat)
+    return mesh_axes
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: Mapping[str, Any]) -> PartitionSpec:
+    used: set = set()
+    return PartitionSpec(
+        *[_resolve(d, n, rules, used) for d, n in zip(shape, axes)])
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axes, e.g. shard(h, 'batch', None, 'embed')."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard(): {len(axes)} axes for rank-{x.ndim} array")
+    spec = spec_for(x.shape, axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

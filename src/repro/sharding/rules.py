@@ -1,0 +1,67 @@
+"""Logical-axis -> mesh-axis rule tables.
+
+The production mesh is (data, model) per pod, with a leading ``pod`` axis in
+multi-pod mode used as extra data parallelism (DESIGN.md §4).  Divisibility
+is checked at application time (params.spec_tree / sharding.context), so
+small archs (e.g. whisper-base) degrade to replication on the axes that do
+not divide instead of failing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+# Baseline (paper-faithful TP/DP) rule table.
+RULES: Dict[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,              # sequence replicated by default (SP opts in)
+    "seq_shard": "model",     # long-context KV/state sharding (decode)
+    # Megatron-style sequence parallelism for the residual stream between
+    # blocks: the scan-saved remat carries shrink by the model-axis size
+    # (fits 64-layer grok in HBM); XLA inserts the all-gather at attention.
+    "seq_sp": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "act_ffn": "model",
+    # MoE expert weights: ZeRO-3/FSDP-style — sharded over data AND model so
+    # a 314B MoE fits 16 GB/chip; XLA all-gathers each layer's experts on use
+    "expert_ffn": ("data", "model"),
+    # dispatch-buffer capacity dim (routed FFN / MoE): sharding it over
+    # "model" turns the backward all-reduce of the (B,G,C,d) cotangent into
+    # all-gather+reduce-scatter (Megatron-SP on the token-slot dim) — §Perf
+    "dispatch_c": "model",
+    # params
+    "vocab": "model",
+    "group": None,            # routed-FFN block axis stays whole per block
+    "expert": None,           # MoE experts: ffn dim sharded instead
+    "lora_rank": None,
+    "layer": None,
+    "codebook": None,
+    "codeword": None,
+    "code_dim": None,
+    "conv": None,
+    "state": None,
+    "lru": "model",
+    "lru_blocks": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+}
+
+
+def rules_for_mesh(mesh) -> Dict[str, object]:
+    """Attach mesh axis sizes (and drop axes the mesh doesn't have)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out: Dict[str, object] = {}
+    for k, v in RULES.items():
+        if v is None:
+            out[k] = None
+        else:
+            flat = (v,) if isinstance(v, str) else tuple(v)
+            kept = tuple(a for a in flat if a in sizes)
+            out[k] = None if not kept else (kept[0] if len(kept) == 1 else kept)
+    out["__sizes__"] = sizes
+    out["__mesh__"] = mesh    # for explicit shard_map schedules (ffn_shmap)
+    return out

@@ -1,0 +1,148 @@
+"""Checkpointing: atomic, content-addressed, elastic-restore.
+
+Layout per step:  <dir>/step_<n>.tmp-<pid>/  ->  atomic rename  ->
+<dir>/step_<n>/  containing one ``arrays.npz`` (leaf path -> array) and
+``manifest.json`` (step, leaf list, dtypes, sha256 of the npz).  Restore
+reads host numpy and re-places onto whatever mesh/sharding the *current*
+process uses — so a checkpoint taken on 256 chips restores onto 512 or 8
+(elastic scaling by construction).
+
+Partitioned trees (train/frozen with None holes) round-trip exactly: None
+subtrees are recorded in the manifest and reconstructed.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _walk(tree: Any, path: str = "") -> List[Tuple[str, Any]]:
+    if tree is None:
+        return [(path + "/__none__", None)]
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_walk(tree[k], f"{path}/{k}"))
+        return out
+    return [(path, tree)]
+
+
+def _unwalk(items: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, value in items.items():
+        parts = [p for p in path.split("/") if p]
+        if parts[-1] == "__none__":
+            parts = parts[:-1]
+            value = None
+        if not parts:
+            return value
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return root
+
+
+def save(state: Any, step: int, ckpt_dir: str, keep: int = 3) -> str:
+    base = pathlib.Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    tmp = base / f"step_{step:08d}.tmp-{os.getpid()}"
+    final = base / f"step_{step:08d}"
+    if final.exists():
+        return str(final)
+    tmp.mkdir(parents=True, exist_ok=True)
+    leaves = _walk(state)
+    arrays = {}
+    meta = {"step": int(step), "leaves": []}
+    for path, value in leaves:
+        if value is None:
+            meta["leaves"].append({"path": path, "none": True})
+            continue
+        arr = np.asarray(jax.device_get(value))
+        key = path.strip("/").replace("/", ".")
+        logical = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":  # ml_dtypes (bf16/f8): raw view
+            arr = arr.view({1: np.uint8, 2: np.uint16,
+                            4: np.uint32}[arr.dtype.itemsize])
+        arrays[key] = arr
+        meta["leaves"].append({"path": path, "key": key,
+                               "dtype": logical,
+                               "shape": list(arr.shape)})
+    npz_path = tmp / "arrays.npz"
+    np.savez(npz_path, **arrays)
+    with open(npz_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    meta["sha256"] = digest
+    (tmp / "manifest.json").write_text(json.dumps(meta))
+    os.replace(tmp, final)          # atomic publish
+    _gc(base, keep)
+    return str(final)
+
+
+def _gc(base: pathlib.Path, keep: int) -> None:
+    steps = sorted(p for p in base.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and ".tmp-" not in p.name)
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+    for p in base.iterdir():        # orphaned tmp dirs from crashes
+        if ".tmp-" in p.name:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = pathlib.Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in base.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and ".tmp-" not in p.name)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None,
+            shardings: Any = None, verify: bool = True) -> Any:
+    """Load a checkpoint; optionally place leaves with a sharding tree of
+    the same structure (elastic re-sharding happens here)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    final = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    meta = json.loads((final / "manifest.json").read_text())
+    if verify:
+        with open(final / "arrays.npz", "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        if digest != meta["sha256"]:
+            raise IOError(f"checkpoint {final} corrupt (sha mismatch)")
+    npz = np.load(final / "arrays.npz")
+    items: Dict[str, Any] = {}
+    for leaf in meta["leaves"]:
+        if leaf.get("none"):
+            items[leaf["path"]] = None
+            continue
+        arr = npz[leaf["key"]]
+        if str(arr.dtype) != leaf["dtype"]:   # restore ml_dtypes view
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, leaf["dtype"], None)
+                                    or leaf["dtype"]))
+        items[leaf["path"]] = arr
+    tree = _unwalk(items)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s) if x is not None else None,
+            tree, shardings,
+            is_leaf=lambda x: x is None or isinstance(x, np.ndarray))
+    else:
+        tree = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x) if x is not None else None, tree,
+            is_leaf=lambda x: x is None or isinstance(x, np.ndarray))
+    return tree

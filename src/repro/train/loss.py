@@ -1,0 +1,58 @@
+"""LM cross-entropy, vocab-TP-aware and sequence-chunked.
+
+The logits tensor (B, S, V) for 256k vocabs dominates activation memory if
+materialized at once; we scan over sequence chunks so only (B, C, V) lives
+at a time, sharded on the vocab axis ("model").  Reductions over the
+sharded vocab dim lower to all-reduces under pjit automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.sharding import shard
+
+
+def lm_cross_entropy(params: dict, cfg: ModelConfig, hidden: jax.Array,
+                     labels: jax.Array, chunk: int = 512
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """hidden: (B, S_h, d); labels: (B, S_lab) with -1 = ignore.
+    The last S_lab hidden positions predict the labels (frontend tokens are
+    automatically excluded)."""
+    s_lab = labels.shape[1]
+    h = hidden[:, -s_lab:, :]
+    w = jax.lax.stop_gradient(transformer.head_weight(params, cfg))
+
+    c = min(chunk, s_lab)
+    if s_lab % c != 0:
+        c = s_lab
+    starts = jnp.arange(0, s_lab, c)
+
+    def chunk_fn(start):
+        hc = jax.lax.dynamic_slice_in_dim(h, start, c, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, start, c, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", hc, w.astype(hc.dtype))
+        if cfg.logits_softcap:
+            cap = cfg.logits_softcap
+            logits = jnp.tanh(logits / cap) * cap
+        logits = shard(logits, "batch", None, "vocab")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        ok = (lc >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * ok
+        correct = (jnp.argmax(logits, -1) == lc).astype(jnp.float32) * ok
+        return nll.sum(), ok.sum(), correct.sum()
+
+    from repro.core.chunking import maybe_map
+    nlls, oks, cors = maybe_map(chunk_fn, starts)
+    total, denom, correct = nlls.sum(), oks.sum(), cors.sum()
+    denom = jnp.maximum(denom, 1.0)
+    loss = total / denom
+    return loss, {"nll_sum": total, "tokens": denom,
+                  "accuracy": correct / denom}

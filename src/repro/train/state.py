@@ -1,0 +1,81 @@
+"""Train state: {step, train (LoRA/router/codebooks), frozen (base), opt}.
+
+The trainable/frozen split happens at the *tree* level (core.params
+partition), so jax.grad only ever differentiates the small subtree — the
+frozen 314B-param base never gets gradient buffers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import params as P
+from repro.models import encdec, transformer
+from repro.optim.adamw import adamw_init
+from repro.sharding.context import spec_for
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    if cfg.family == "audio":
+        return encdec.encdec_defs(cfg)
+    return transformer.lm_defs(cfg)
+
+
+def model_hidden(params: dict, cfg: ModelConfig, batch: Dict[str, Any],
+                 remat: bool = True):
+    if cfg.family == "audio":
+        return encdec.encdec_hidden(params, cfg, batch, remat=remat)
+    return transformer.lm_hidden(params, cfg, batch, remat=remat)
+
+
+def init_state(cfg: ModelConfig, key: jax.Array) -> dict:
+    defs = model_defs(cfg)
+    params = P.init_tree(defs, key)
+    mask = P.trainable_mask(defs)
+    train, frozen = P.partition(params, mask)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "train": train,
+        "frozen": frozen,
+        "opt": adamw_init(train),
+    }
+
+
+def abstract_state(cfg: ModelConfig) -> dict:
+    defs = model_defs(cfg)
+    params = P.abstract_tree(defs)
+    mask = P.trainable_mask(defs)
+    train, frozen = P.partition(params, mask)
+    f32 = lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "train": train,
+        "frozen": frozen,
+        "opt": {"m": jax.tree_util.tree_map(f32, train),
+                "v": jax.tree_util.tree_map(f32, train)},
+    }
+
+
+def state_specs(cfg: ModelConfig, rules) -> dict:
+    from jax.sharding import PartitionSpec
+    defs = model_defs(cfg)
+    specs = P.spec_tree(defs, rules)
+    mask = P.trainable_mask(defs)
+    train_s, frozen_s = P.partition(specs, mask)
+    return {
+        "step": PartitionSpec(),
+        "train": train_s,
+        "frozen": frozen_s,
+        "opt": {"m": train_s, "v": train_s},
+    }
+
+
+def full_params(state: dict) -> dict:
+    return P.combine(state["train"], state["frozen"])
+
+
+def param_specs(cfg: ModelConfig, rules) -> dict:
+    return P.spec_tree(model_defs(cfg), rules)

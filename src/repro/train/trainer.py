@@ -1,0 +1,109 @@
+"""Trainer: jit'd train_step loop + checkpoint/restart + straggler monitor
++ preemption-safe shutdown.  Works on one CPU device (tests/examples) and
+on the production mesh (launch/train.py) through the same code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as steps_lib
+from repro.optim.adamw import OptimizerConfig
+from repro.train import checkpoint
+from repro.train import state as S
+from repro.train.straggler import StepTimeMonitor, StragglerConfig
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_interval: int = 50
+    keep_checkpoints: int = 3
+    log_interval: int = 10
+    loss_chunk: int = 512
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, ocfg: OptimizerConfig,
+                 tcfg: TrainerConfig, mesh=None, rules=None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.ocfg = ocfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.rules = rules
+        self.monitor = StepTimeMonitor()
+        self.metrics_log: list = []
+        self._stop = False
+
+        step_fn = steps_lib.build_train_step(cfg, ocfg,
+                                             loss_chunk=tcfg.loss_chunk)
+        if mesh is not None and rules is not None:
+            from repro.configs.shapes import input_specs  # noqa: F401
+            st = S.state_specs(cfg, rules)
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+
+        # resume-or-init
+        start = None
+        if tcfg.ckpt_dir:
+            start = checkpoint.latest_step(tcfg.ckpt_dir)
+        if start is not None:
+            self.state = checkpoint.restore(tcfg.ckpt_dir, start)
+            self.start_step = int(start)
+        else:
+            self.state = S.init_state(cfg, jax.random.PRNGKey(seed))
+            self.start_step = 0
+
+        # preemption-safe: SIGTERM triggers an emergency checkpoint
+        try:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+        except ValueError:      # not in main thread (tests)
+            pass
+
+    def _on_sigterm(self, *_):
+        self._stop = True
+
+    def _save(self, step: int) -> None:
+        if self.tcfg.ckpt_dir:
+            checkpoint.save(self.state, step, self.tcfg.ckpt_dir,
+                            keep=self.tcfg.keep_checkpoints)
+
+    def run(self, data: Iterator[Dict[str, np.ndarray]],
+            step_hook: Optional[Callable[[int, dict], None]] = None) -> dict:
+        step = self.start_step
+        for batch in data:
+            if step >= self.tcfg.total_steps or self._stop:
+                break
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.monitor.start()
+            self.state, metrics = self._step(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            self.monitor.stop(step)
+            step += 1
+            if step % self.tcfg.log_interval == 0 or step == 1:
+                self.metrics_log.append({"step": step, **metrics})
+            if step_hook:
+                step_hook(step, metrics)
+            if self.tcfg.ckpt_dir and step % self.tcfg.ckpt_interval == 0:
+                self._save(step)
+            if self.monitor.should_act():
+                # straggler density high: checkpoint eagerly so a scheduler
+                # can replace the slow host with bounded lost work
+                self._save(step)
+                self.monitor.events.append(
+                    {"step": step, "action": "eager_checkpoint"})
+        self._save(step)
+        return {"final_step": step,
+                "metrics": self.metrics_log,
+                "straggler": self.monitor.summary(),
+                "interrupted": self._stop}

@@ -1,0 +1,64 @@
+"""The explicit shard_map FFN schedule must be numerically identical to the
+pjit grouped path (values and LoRA gradients) — checked on a trivial 1x1
+mesh (multi-device behavior is covered by the dry-run compile proof)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ffn_shmap, lora as lora_mod
+from repro.core import routed_ffn as rf
+from repro.core.params import init_tree
+from repro.launch.mesh import make_mesh
+
+
+def _setup():
+    lcfg = lora_mod.LoRAConfig(rank=4, alpha=4.0)
+    rcfg = rf.RoutedFFNConfig(d_model=32, d_ff=64, num_groups=4,
+                              active_groups=2, capacity_factor=4.0,
+                              gated=True, activation="gelu")
+    p = init_tree(rf.param_defs(rcfg, lcfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    return lcfg, rcfg, p, x
+
+
+def test_shmap_matches_grouped_values_and_grads():
+    lcfg, rcfg, p, x = _setup()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert ffn_shmap.applicable(mesh, rcfg, 64, 16, 2)
+    with mesh:
+        y_s, aux_s = jax.jit(
+            lambda x, p: ffn_shmap.routed_ffn_shmap(x, p, rcfg, lcfg, mesh)
+        )(x, p)
+    y_g, aux_g = rf.routed_ffn(x, p, rcfg, lcfg, impl="grouped")
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_g),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(float(aux_s["lb_loss"]),
+                               float(aux_g["lb_loss"]), rtol=1e-5)
+
+    with mesh:
+        def loss_s(p):
+            y, _ = ffn_shmap.routed_ffn_shmap(x, p, rcfg, lcfg, mesh)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        g_s = jax.jit(jax.grad(loss_s))(p)
+
+    def loss_g(p):
+        y, _ = rf.routed_ffn(x, p, rcfg, lcfg, impl="grouped")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+    g_g = jax.grad(loss_g)(p)
+    flat_g = {jax.tree_util.keystr(kp): v for kp, v in
+              jax.tree_util.tree_leaves_with_path(g_g)}
+    for kp, v in jax.tree_util.tree_leaves_with_path(g_s):
+        key = jax.tree_util.keystr(kp)
+        if "lora" in key or "router" in key:
+            np.testing.assert_allclose(np.asarray(v), np.asarray(flat_g[key]),
+                                       rtol=2e-3, atol=2e-3, err_msg=key)
+
+
+def test_shmap_applicability_gates():
+    lcfg, rcfg, p, x = _setup()
+    assert not ffn_shmap.applicable(None, rcfg, 64, 16, 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # seq not divisible by tp=1 is impossible; group_dim check:
+    bad = rf.RoutedFFNConfig(d_model=32, d_ff=60, num_groups=4,
+                             active_groups=2)
+    assert bad.d_ff % bad.num_groups == 0

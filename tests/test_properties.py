@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch, pq
+from repro.core import sparse_attention as sa
+
+jax.config.update("jax_platform_name", "cpu")
+
+small = dict(max_examples=20, deadline=None)
+
+
+# --------------------------------------------------------------- PQ
+@settings(**small)
+@given(n=st.integers(4, 32), m=st.integers(1, 4), e=st.integers(2, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_pq_codes_in_range_and_self_score_max(n, m, e, seed):
+    dp = 4
+    key = jax.random.PRNGKey(seed)
+    cb = jax.random.normal(key, (m, e, dp))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, n, m * dp))
+    codes = pq.assign(x, cb)
+    assert codes.shape == (1, n, m)
+    assert int(codes.min()) >= 0 and int(codes.max()) < e
+    s = pq.match_scores(codes, codes, e)
+    diag = jnp.diagonal(s, axis1=-2, axis2=-1)
+    assert bool((diag == m).all())
+    assert float(s.max()) <= m and float(s.min()) >= 0
+    # symmetry
+    np.testing.assert_array_equal(np.asarray(s),
+                                  np.asarray(jnp.swapaxes(s, -1, -2)))
+
+
+@settings(**small)
+@given(seed=st.integers(0, 2 ** 16))
+def test_pq_ema_reduces_quantization_error(seed):
+    key = jax.random.PRNGKey(seed)
+    cfg = pq.PQConfig(head_dim=16, code_dim=4, num_codewords=8)
+    cb = jax.random.normal(key, (4, 8, 4))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (256, 16))
+    e0 = float(pq.quantization_error(x, cb))
+    for _ in range(10):
+        cb = pq.ema_update(cb, x, ema=0.3)
+    e1 = float(pq.quantization_error(x, cb))
+    assert e1 <= e0 + 1e-5
+
+
+# --------------------------------------------------------- selection
+@settings(**small)
+@given(nq=st.integers(4, 24), nk=st.integers(4, 48), l=st.integers(1, 16),
+       maxs=st.integers(1, 6), pmask=st.floats(0.2, 1.0),
+       seed=st.integers(0, 2 ** 16))
+def test_bucket_select_equals_sort_select(nq, nk, l, maxs, pmask, seed):
+    l = min(l, nk)
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.randint(key, (2, nq, nk), 0, maxs + 1).astype(jnp.float32)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), pmask,
+                                (2, nq, nk))
+    i1, v1 = sa.select_topl(s, l, mask)
+    i2, v2 = sa.bucket_select(s, mask, l, maxs)
+    a1, a2 = np.asarray(i1), np.asarray(i2)
+    m1, m2 = np.asarray(v1), np.asarray(v2)
+    assert m1.sum() == m2.sum()
+    for b in range(a1.shape[0]):
+        for q in range(a1.shape[1]):
+            s1 = set(a1[b, q][m1[b, q]].tolist())
+            s2 = set(a2[b, q][m2[b, q]].tolist())
+            assert s1 == s2
+    # count == min(L, #valid)
+    nvalid = np.asarray(mask).sum(-1)
+    np.testing.assert_array_equal(m2.sum(-1), np.minimum(nvalid, l))
+    # all selected indices are valid positions
+    mk = np.asarray(mask)
+    for b in range(a2.shape[0]):
+        for q in range(a2.shape[1]):
+            for j, ok in zip(a2[b, q], m2[b, q]):
+                if ok:
+                    assert mk[b, q, j]
+
+
+# --------------------------------------------------------- dispatch
+@settings(**small)
+@given(bsz=st.integers(1, 3), s=st.integers(2, 24), g=st.integers(2, 6),
+       k=st.integers(1, 3), seed=st.integers(0, 2 ** 16))
+def test_dispatch_roundtrip_identity(bsz, s, g, k, seed):
+    """combine(gather(x)) with unit gates == k * x when nothing drops."""
+    k = min(k, g)
+    key = jax.random.PRNGKey(seed)
+    choice = jax.random.randint(key, (bsz, s, k), 0, g)
+    # force distinct choices per token to mimic top-k without replacement
+    gate = jnp.ones((bsz, s, k), jnp.float32)
+    cap = s * k  # no drops possible
+    plan = dispatch.make_plan(choice, gate, g, cap)
+    assert float(plan.dropped) == 0.0
+    x = jax.random.normal(jax.random.fold_in(key, 2), (bsz, s, 8))
+    xg = dispatch.gather(x, plan)
+    y = dispatch.combine(xg, plan, s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * k,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**small)
+@given(bsz=st.integers(1, 2), s=st.integers(4, 16), seed=st.integers(0, 999))
+def test_dispatch_capacity_drops_are_reported(bsz, s, seed):
+    g, k = 4, 2
+    key = jax.random.PRNGKey(seed)
+    # all tokens to group 0 -> guaranteed overflow at cap=8 < s*k
+    choice = jnp.zeros((bsz, s, k), jnp.int32)
+    gate = jnp.ones((bsz, s, k), jnp.float32)
+    cap = 8
+    plan = dispatch.make_plan(choice, gate, g, cap)
+    expected_drop = max(0, s * k - cap) / (s * k)
+    assert abs(float(plan.dropped) - expected_drop) < 1e-5
+
+
+# --------------------------------------------------- sparse attention
+@settings(**small)
+@given(seed=st.integers(0, 2 ** 16), frac=st.sampled_from([0.25, 0.5, 1.0]))
+def test_sparse_attention_rows_are_convex_combos(seed, frac):
+    """Each output row lies in the convex hull of V rows (softmax weights)."""
+    key = jax.random.PRNGKey(seed)
+    cfg = pq.PQConfig(head_dim=16, code_dim=4, num_codewords=8)
+    cb = jax.random.normal(key, (4, 8, 4))
+    scfg = sa.SparseAttentionConfig(pq=cfg, top_fraction=frac, min_l=2,
+                                    chunk_q=8)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 16, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 16, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 16, 16))
+    out, _ = sa.sparse_mha(q, k, v, cb, scfg, 0.25, causal=True)
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    o = np.asarray(out)
+    assert (o >= vmin - 1e-4).all() and (o <= vmax + 1e-4).all()
+    assert not np.isnan(o).any()
