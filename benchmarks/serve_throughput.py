@@ -1,0 +1,74 @@
+"""Serving throughput: steady-state decode tokens/s vs prefill tokens/s,
+with compile/warmup reported separately (an honest split — the old
+launcher folded tracing + compilation into tokens/s).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput --requests 12
+
+Reports, per configuration:
+  compile_s       — first-run wall clock minus steady-state wall clock
+  prefill_tok_s   — prompt tokens / sum of block_until_ready'd prefill calls
+  decode_tok_s    — generated tokens / sum of block_until_ready'd decode
+                    chunks (the continuous-batching steady state)
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.core.params import init_tree
+from repro.launch.serve import build_requests
+from repro.serving.engine import Engine
+from repro.train.state import model_defs
+
+from benchmarks.common import scale_note
+
+
+def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
+          decode_chunk: int, ragged: bool) -> dict:
+    cfg = configs.get_smoke(arch)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=prompt_len + gen + 8,
+                    num_slots=slots, decode_chunk=decode_chunk)
+    reqs = build_requests(cfg, requests, prompt_len, gen, ragged)
+
+    t0 = time.perf_counter()
+    engine.run(reqs)
+    first_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    engine.run(reqs)
+    steady_wall = time.perf_counter() - t0
+    s = engine.last_stats
+    return {
+        "arch": cfg.name, "requests": requests, "slots": slots,
+        "prompt_len": prompt_len, "gen": gen, "ragged": ragged,
+        "compile_s": round(first_wall - steady_wall, 2),
+        "steady_wall_s": round(steady_wall, 2),
+        "prefill_tok_s": round(s.prefill_tok_s, 1),
+        "decode_tok_s": round(s.decode_tok_s, 1),
+        "decode_steps": s.decode_steps,
+        "decode_tokens": s.decode_tokens,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=16)
+    args = ap.parse_args()
+
+    print(json.dumps({"note": scale_note()}))
+    for ragged in (False, True):
+        row = bench(args.arch, args.requests, args.slots, args.prompt_len,
+                    args.gen, args.decode_chunk, ragged)
+        print(json.dumps(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,17 @@
-"""Batched serving example: prefill + decode with the SPT sparse-MHA
-decode path (top-L selection over the PQ-coded KV cache).
+"""Continuous-batching serving example: ragged prompts stream through a
+small pool of decode slots, with the SPT sparse-MHA decode path (top-L
+selection over the PQ-coded KV cache) and EOS-based early exit.
 
-    PYTHONPATH=src python examples/serve_batch.py --requests 4 --gen 16
+    PYTHONPATH=src python examples/serve_batch.py --requests 8 --slots 4
 """
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.core.params import init_tree
+from repro.launch.serve import build_requests
 from repro.serving.engine import Engine
 from repro.train.state import model_defs
 
@@ -19,29 +19,30 @@ from repro.train.state import model_defs
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.8)
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_len=args.prompt_len + args.gen + 8)
-    batch = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(1), (args.requests, args.prompt_len), 0,
-        cfg.vocab_size, dtype=jnp.int32)}
-    if cfg.frontend:
-        batch["frontend_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.requests, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
-    t0 = time.time()
-    out = engine.generate(batch, steps=args.gen, temperature=0.8,
-                          key=jax.random.PRNGKey(3))
-    dt = time.time() - t0
+    engine = Engine(cfg, params, max_len=args.prompt_len + args.gen + 8,
+                    num_slots=args.slots, eos_id=args.eos_id)
+
+    requests = build_requests(cfg, args.requests, args.prompt_len, args.gen,
+                              ragged=True)
+
+    out = engine.run(requests, temperature=args.temperature,
+                     key=jax.random.PRNGKey(3))
     print(json.dumps({
-        "arch": cfg.name, "requests": args.requests,
-        "tokens_per_s": round(args.requests * args.gen / dt, 1),
-        "generations": [t[:10] for t in out.tokens],
+        "arch": cfg.name, "requests": args.requests, "slots": args.slots,
+        **engine.last_stats.as_dict(),
+        "completions": [{"uid": c.uid, "prompt_len": c.prompt_len,
+                         "reason": c.finish_reason, "tokens": c.tokens[:10]}
+                        for c in out],
     }, indent=1))
 
 

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Fast CI smoke subset: skips tests marked `slow` (multi-arch smokes and
+# end-to-end training) so builders can iterate in ~1-2 min.  The tier-1
+# command stays the full suite:
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "not slow" "$@"

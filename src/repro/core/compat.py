@@ -1,0 +1,30 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+`shard_map` graduated from `jax.experimental.shard_map` to `jax.shard_map`
+(and the replication-check kwarg was renamed `check_rep` -> `check_vma`
+along the way).  Every explicit-collective schedule in this repo goes
+through this one helper so the rest of the code can target the modern
+spelling regardless of the installed JAX.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None) -> Any:
+    """`jax.shard_map` when present, else the experimental module.
+
+    check_vma: None means "library default"; a bool is forwarded as
+    `check_vma` (new JAX) or `check_rep` (old JAX).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -116,8 +116,27 @@ def _qkv(p: dict, x: jax.Array, kv_x: jax.Array, cfg: ModelConfig,
 
 def write_cache(cache: dict, cfg: ModelConfig, p: dict, k: jax.Array,
                 v: jax.Array, pos_k: jax.Array) -> dict:
+    """pos_k: (S_new,) shared positions, or (B, S_new) per-sequence positions
+    (continuous-batching decode, where slots sit at ragged depths)."""
     size = cache["k"].shape[2]
     s_new = k.shape[2]
+    if pos_k.ndim == 2:
+        b = cache["k"].shape[0]
+        slots = (pos_k % size).astype(jnp.int32)          # (B, S_new)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        new = dict(cache)
+        # advanced-index scatter: target view is (B, S_new, Hk, hd)
+        new["k"] = cache["k"].at[bidx, :, slots].set(
+            k.transpose(0, 2, 1, 3).astype(cache["k"].dtype))
+        new["v"] = cache["v"].at[bidx, :, slots].set(
+            v.transpose(0, 2, 1, 3).astype(cache["v"].dtype))
+        new["slot_pos"] = cache["slot_pos"].at[bidx, slots].set(
+            pos_k.astype(jnp.int32))
+        if "codes" in cache:
+            codes = pq.assign(k, p["pq"]["codebooks"])    # (B, Hk, S_new, M)
+            new["codes"] = cache["codes"].at[bidx, :, slots].set(
+                codes.transpose(0, 2, 1, 3).astype(jnp.int8))
+        return new
     if s_new > size:
         k, v, pos_k = k[:, :, -size:], v[:, :, -size:], pos_k[-size:]
         s_new = size
@@ -183,14 +202,18 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                ) -> Tuple[jax.Array, Optional[dict], dict]:
     """Returns (y, new_cache, aux).  x: (B, S, d_model).
 
-    pos: absolute position of x[:, 0] (scalar; batches stay aligned).
+    pos: absolute position of x[:, 0] — a scalar when batches are aligned,
+    or a (B,) vector when serving slots sit at ragged depths.
     kv_x: source for K/V (cross-attention); defaults to x.
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
     lc = cfg.spt.lora
     start = jnp.asarray(0 if pos is None else pos, jnp.int32)
-    pos_q = start + jnp.arange(s, dtype=jnp.int32)
+    if start.ndim == 1:
+        pos_q = start[:, None] + jnp.arange(s, dtype=jnp.int32)   # (B, s)
+    else:
+        pos_q = start + jnp.arange(s, dtype=jnp.int32)            # (s,)
     kv_src = x if kv_x is None else kv_x
     pos_k = (jnp.arange(kv_src.shape[1], dtype=jnp.int32)
              if kv_x is not None else pos_q)

@@ -39,10 +39,13 @@ def rope_freqs(head_dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
-    """x: (..., seq, head_dim); pos: (seq,) or broadcastable absolute positions.
-    LLaMA-style rotate-half."""
+    """x: (..., seq, head_dim); pos: (seq,) or (batch, seq) per-sequence
+    absolute positions (continuous batching decodes slots at ragged
+    positions).  LLaMA-style rotate-half."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    if pos.ndim == 2 and x.ndim == 4:
+        pos = pos[:, None]                                # broadcast over heads
     angles = pos[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

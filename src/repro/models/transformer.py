@@ -194,7 +194,10 @@ def _embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
         x = jnp.concatenate([fe, x], axis=1)
     if cfg.positional == "learned":
         s = x.shape[1]
-        pos = jnp.asarray(pos0, jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+        p0 = jnp.asarray(pos0, jnp.int32)
+        # scalar pos0 -> (s,) positions; per-slot (B,) pos0 -> (B, s)
+        pos = p0[..., None] + jnp.arange(s, dtype=jnp.int32) \
+            if p0.ndim else p0 + jnp.arange(s, dtype=jnp.int32)
         x = x + jnp.take(params["pos"]["pos_embedding"], pos, axis=0,
                          mode="clip")
     return shard(x, "batch", None, None)
@@ -294,9 +297,80 @@ def lm_prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 def lm_decode_step(params: dict, cfg: ModelConfig, caches: Any,
                    token: jax.Array, pos: jax.Array
                    ) -> Tuple[Any, jax.Array]:
-    """One token for every sequence in the batch.  token: (B,), pos: ()."""
+    """One token for every sequence in the batch.  token: (B,);
+    pos: () shared position, or (B,) per-slot positions (continuous
+    batching decodes slots sitting at ragged depths)."""
     x = _embed_inputs(params, cfg, {"tokens": token[:, None]}, pos0=pos)
     x, caches, _ = _run_blocks(params, cfg, x, mode="decode", caches=caches,
                                pos=pos, remat=False)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
     return caches, logits_of(params, cfg, x)
+
+
+# ------------------------------------------------- serving cache plumbing
+def supports_ragged_prefill(cfg: ModelConfig) -> bool:
+    """Right-padded ragged prefill is exact only for pure-attention stacks:
+    padding past a sequence's length is causally invisible to attention,
+    but it would corrupt recurrent (rec/ssd) states."""
+    return all(k == "attn" for k in cfg.pattern)
+
+
+def _mask_invalid_slots(caches: dict, lengths: jax.Array) -> dict:
+    """Mark attention-cache slots holding positions >= lengths[b] as empty
+    (slot_pos = -1) so a right-padded prefill leaves no phantom KV."""
+    def walk(tree, lead):
+        out = {}
+        for name, v in tree.items():
+            if isinstance(v, dict):
+                out[name] = walk(v, lead)
+            elif name == "slot_pos":
+                ln = lengths.reshape((1,) * lead + (-1, 1))
+                out[name] = jnp.where(v >= ln, jnp.int32(-1), v)
+            else:
+                out[name] = v
+        return out
+
+    new = {"units": walk(caches["units"], 1)}
+    if "tail" in caches:
+        new["tail"] = walk(caches["tail"], 0)
+    return new
+
+
+def lm_prefill_ragged(params: dict, cfg: ModelConfig,
+                      batch: Dict[str, jax.Array], lengths: jax.Array,
+                      max_len: int) -> Tuple[Any, jax.Array]:
+    """Prefill right-padded prompts of per-sequence `lengths` (total model
+    positions, i.e. including any frontend tokens).  Returns (caches,
+    logits at each sequence's last real position)."""
+    bsz = batch["tokens"].shape[0]
+    caches = init_caches(cfg, bsz, max_len)
+    x = _embed_inputs(params, cfg, batch)
+    x, caches, _ = _run_blocks(params, cfg, x, mode="prefill", caches=caches,
+                               pos=0, remat=False)
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    x_last = jnp.take_along_axis(
+        x, idx[:, None, None].astype(jnp.int32), axis=1)        # (B, 1, d)
+    x_last = layers.apply_norm(params["final_norm"], x_last, cfg.norm)
+    caches = _mask_invalid_slots(caches, lengths)
+    return caches, logits_of(params, cfg, x_last)
+
+
+def write_slot_caches(dst: dict, row: dict, slot: jax.Array) -> dict:
+    """Scatter a batch-1 prefill cache `row` into batch index `slot` of the
+    engine cache `dst` — the whole row is replaced (KV, slot_pos, recurrent
+    states), which doubles as the slot's recycling reset."""
+    def walk(d, r, lead):
+        out = {}
+        for name, v in d.items():
+            if isinstance(v, dict):
+                out[name] = walk(v, r[name], lead)
+            elif lead:                         # stacked units: (U, B, ...)
+                out[name] = v.at[:, slot].set(r[name][:, 0].astype(v.dtype))
+            else:                              # tail blocks: (B, ...)
+                out[name] = v.at[slot].set(r[name][0].astype(v.dtype))
+        return out
+
+    new = {"units": walk(dst["units"], row["units"], True)}
+    if "tail" in dst:
+        new["tail"] = walk(dst["tail"], row["tail"], False)
+    return new

@@ -1,20 +1,41 @@
-"""Serving: prefill + decode step builders and a batched-request engine.
+"""Serving: prefill/decode step builders and a continuous-batching engine.
 
 serve_step semantics for the dry-run cells:
   prefill_32k  — lower `prefill_step` over (B, S) prompts
   decode_32k / long_500k — lower `decode_step`: one new token per sequence
                  against a KV cache of seq_len (the cache is a donated input)
+
+The `Engine` runs **continuous batching** over a fixed number of decode
+slots (vLLM-style, in JAX):
+
+  * requests queue up and are admitted into free slots as they open;
+  * each admission prefills the prompt alone (batch-1, right-padded to a
+    power-of-2 bucket for pure-attention stacks so retraces are bounded)
+    and scatters the resulting cache row into the slot — the scatter
+    replaces the whole row, which doubles as slot recycling;
+  * decode runs in jit-compiled `lax.while_loop` chunks with per-slot
+    positions, so the whole generation traces ONCE instead of per token;
+    the loop exits a chunk early when every slot has finished;
+  * slots retire on EOS or on their per-request token budget, freeing the
+    slot for the next queued request.
+
+Timing is honest: prefill and decode are accumulated separately with
+`block_until_ready` at each boundary, and reported via `ServeStats` so
+callers can separate compile/warmup (first run) from steady state.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import encdec, transformer
+from repro.models import attention, encdec, ffn, transformer
 
 
 def build_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
@@ -54,30 +75,352 @@ def decode_cache_axes(cfg: ModelConfig):
     return transformer.cache_axes(cfg)
 
 
+# ---------------------------------------------------------------- requests
+@dataclasses.dataclass
+class Request:
+    """One generation request for the continuous-batching engine."""
+    uid: int
+    tokens: Sequence[int]                  # prompt token ids
+    max_new_tokens: int = 16
+    frontend_embeds: Optional[Any] = None  # (F, d) for VLM-style frontends
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]                      # generated ids (EOS included)
+    finish_reason: str                     # "eos" | "length"
+    prompt_len: int
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Wall-clock split of one `Engine.run` (block_until_ready-bounded)."""
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    prefill_tokens: int = 0                # prompt tokens processed
+    decode_tokens: int = 0                 # tokens produced by decode steps
+    decode_steps: int = 0                  # batch-wide while_loop trips
+    admitted: int = 0
+    completed: int = 0
+
+    @property
+    def prefill_tok_s(self) -> float:
+        return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"prefill_s": round(self.prefill_s, 4),
+                "decode_s": round(self.decode_s, 4),
+                "prefill_tokens": self.prefill_tokens,
+                "decode_tokens": self.decode_tokens,
+                "decode_steps": self.decode_steps,
+                "prefill_tok_s": round(self.prefill_tok_s, 1),
+                "decode_tok_s": round(self.decode_tok_s, 1),
+                "admitted": self.admitted, "completed": self.completed}
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: List[List[int]]
     steps: int
 
 
+# ---------------------------------------------------------------- engine
 class Engine:
-    """Minimal batched serving engine: greedy/temperature sampling over a
-    fixed slot batch; used by examples/serve_batch.py and the benchmarks."""
+    """Continuous-batching serving engine over `num_slots` decode slots.
+
+    `run(requests)` is the native API (queue admission, EOS/budget exits,
+    ragged prompts).  `generate(batch, steps)` keeps the legacy fixed-batch
+    API used by the benchmarks and system tests; for greedy decoding it is
+    routed through the slot engine, whose outputs are row-for-row identical
+    to the old per-token Python loop.
+    """
 
     def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
-                 jit: bool = True):
+                 jit: bool = True, *, num_slots: int = 8,
+                 eos_id: Optional[int] = None, decode_chunk: int = 16,
+                 pad_id: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.num_slots = num_slots
+        self.eos_id = eos_id
+        self.decode_chunk = max(1, decode_chunk)
+        self.pad_id = pad_id
+        self.last_stats: Optional[ServeStats] = None
+        self._use_jit = jit
+        # legacy per-token step fns (audio family + sampled generate())
         self._prefill = build_prefill_step(cfg, max_len)
         self._decode = build_decode_step(cfg)
         if jit:
             self._prefill = jax.jit(self._prefill)
             self._decode = jax.jit(self._decode, donate_argnums=(1,))
+        self._prefill_one: Optional[Callable] = None
+        self._chunk_cache: Dict[Any, Callable] = {}
+        self._write_slot = (
+            jax.jit(transformer.write_slot_caches, donate_argnums=(0,))
+            if jit else transformer.write_slot_caches)
 
+    # ------------------------------------------------------------ prefill
+    def _pad_invariant(self) -> bool:
+        """True when right-padding provably cannot change real-token
+        outputs.  That requires: a pure-attention stack (padding corrupts
+        recurrent states), no sliding-window ring cache (padding displaces
+        real KV), dense attention (sparse MHA's top-L budget counts the
+        padded keys), and dense FFN (routed-FFN/MoE capacity dispatch lets
+        pad tokens compete with real ones for slots)."""
+        cfg = self.cfg
+        return (transformer.supports_ragged_prefill(cfg)
+                and cfg.window is None
+                and not attention.sparse_applicable(cfg)
+                and not ffn.routed_applicable(cfg)
+                and cfg.num_experts == 0)
+
+    def _pad_len(self, n: int) -> int:
+        """Prompt-length bucket: pad-invariant configs pad right to a power
+        of two (cache slots past the real length are invalidated), bounding
+        jit retraces to O(log L); everything else prefills at exact length
+        so outputs stay identical to the per-token reference."""
+        n = max(1, n)
+        if not self._pad_invariant():
+            return n
+        p = 8
+        while p < n:
+            p <<= 1
+        frontend = self.cfg.frontend_tokens if self.cfg.frontend else 0
+        return max(n, min(p, self.max_len - frontend))
+
+    def _get_prefill(self) -> Callable:
+        if self._prefill_one is None:
+            cfg, max_len = self.cfg, self.max_len
+
+            def fn(params, batch, lengths):
+                return transformer.lm_prefill_ragged(params, cfg, batch,
+                                                     lengths, max_len)
+            self._prefill_one = jax.jit(fn) if self._use_jit else fn
+        return self._prefill_one
+
+    def _prefill_request(self, r: Request):
+        """Batch-1 prefill of one request; returns (cache_row, logits)."""
+        cfg = self.cfg
+        p = self._pad_len(len(r.tokens))
+        toks = np.full((1, p), self.pad_id, np.int32)
+        toks[0, :len(r.tokens)] = np.asarray(r.tokens, np.int32)
+        frontend = cfg.frontend_tokens if cfg.frontend else 0
+        batch = {"tokens": jnp.asarray(toks)}
+        if frontend:
+            fe = jnp.asarray(r.frontend_embeds).reshape(
+                1, frontend, cfg.d_model)
+            batch["frontend_embeds"] = fe
+        lengths = jnp.asarray([frontend + len(r.tokens)], jnp.int32)
+        return self._get_prefill()(self.params, batch, lengths)
+
+    # ------------------------------------------------------------- decode
+    def _get_chunk(self, slots: int, max_gen: int, greedy: bool,
+                   eos_id: Optional[int]) -> Callable:
+        key = (slots, max_gen, greedy, eos_id)
+        fn = self._chunk_cache.get(key)
+        if fn is not None:
+            return fn
+        cfg, chunk_steps = self.cfg, self.decode_chunk
+
+        def chunk(params, caches, tok, pos, active, n, limit, buf, keys,
+                  temp):
+            def cond(c):
+                return (c[0] < chunk_steps) & jnp.any(c[4])
+
+            def body(c):
+                t, caches, tok, pos, active, n, buf = c
+                caches, logits = transformer.lm_decode_step(
+                    params, cfg, caches, tok, pos)
+                lg = logits[:, -1].astype(jnp.float32)          # (B, V)
+                if greedy:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    kb = jax.vmap(jax.random.fold_in)(keys, n)
+                    nxt = jax.vmap(
+                        lambda k, l: jax.random.categorical(k, l / temp)
+                    )(kb, lg).astype(jnp.int32)
+                bidx = jnp.arange(slots, dtype=jnp.int32)
+                col = jnp.clip(n, 0, max_gen - 1)
+                buf = buf.at[bidx, col].set(
+                    jnp.where(active, nxt, buf[bidx, col]))
+                step = active.astype(jnp.int32)
+                n = n + step
+                pos = pos + step
+                done = n >= limit
+                if eos_id is not None:
+                    done |= nxt == eos_id
+                tok = jnp.where(active, nxt, tok)
+                active = active & ~done
+                return t + 1, caches, tok, pos, active, n, buf
+
+            t, caches, tok, pos, active, n, buf = jax.lax.while_loop(
+                cond, body,
+                (jnp.zeros((), jnp.int32), caches, tok, pos, active, n, buf))
+            return caches, tok, pos, active, n, buf, t
+
+        if self._use_jit:
+            chunk = jax.jit(chunk, donate_argnums=(1,))
+        self._chunk_cache[key] = chunk
+        return chunk
+
+    # ---------------------------------------------------------- scheduler
+    def run(self, requests: Sequence[Request], *, temperature: float = 0.0,
+            key: Optional[jax.Array] = None,
+            eos_id: Any = "engine-default") -> List[Completion]:
+        """Serve `requests` (any count vs. `num_slots`) to completion.
+
+        Returns completions in request order; wall-clock split is left in
+        `self.last_stats`."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "continuous batching covers decoder-only LMs; use "
+                "generate() for the enc-dec audio family")
+        if eos_id == "engine-default":
+            eos_id = self.eos_id
+        uids = [r.uid for r in requests]
+        if len(set(uids)) != len(uids):
+            raise ValueError("duplicate request uids")
+        frontend = cfg.frontend_tokens if cfg.frontend else 0
+        for r in requests:
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.uid}: max_new_tokens < 1")
+            if frontend and r.frontend_embeds is None:
+                raise ValueError(
+                    f"request {r.uid}: {cfg.name} has a {cfg.frontend} "
+                    f"frontend; frontend_embeds is required")
+            need = frontend + len(r.tokens) + r.max_new_tokens
+            if need > self.max_len:
+                raise ValueError(
+                    f"request {r.uid} needs {need} positions > "
+                    f"max_len={self.max_len}")
+
+        slots = self.num_slots
+        greedy = temperature <= 0.0 or key is None
+        base_key = key if key is not None else jax.random.PRNGKey(0)
+        max_gen = max((r.max_new_tokens for r in requests), default=1)
+        stats = ServeStats()
+        queue = collections.deque(requests)
+        completions: Dict[int, Completion] = {}
+
+        caches = transformer.init_caches(cfg, slots, self.max_len)
+        tok = np.zeros(slots, np.int32)
+        pos = np.zeros(slots, np.int32)
+        active = np.zeros(slots, bool)
+        n_gen = np.zeros(slots, np.int32)
+        limit = np.ones(slots, np.int32)
+        buf = np.zeros((slots, max_gen), np.int32)
+        keys = np.zeros((slots, 2), np.uint32)
+        slot_req: List[Optional[Request]] = [None] * slots
+        chunk_fn = self._get_chunk(slots, max_gen, greedy, eos_id)
+
+        def retire(b: int):
+            r = slot_req[b]
+            toks = buf[b, :n_gen[b]].tolist()
+            reason = ("eos" if eos_id is not None and toks
+                      and toks[-1] == eos_id else "length")
+            completions[r.uid] = Completion(
+                uid=r.uid, tokens=toks, finish_reason=reason,
+                prompt_len=len(r.tokens))
+            slot_req[b] = None
+            active[b] = False
+            stats.completed += 1
+
+        while queue or any(s is not None for s in slot_req):
+            # -------- admit queued requests into free slots
+            while queue and any(s is None for s in slot_req):
+                b = next(i for i, s in enumerate(slot_req) if s is None)
+                r = queue.popleft()
+                t0 = time.perf_counter()
+                row, logits = self._prefill_request(r)
+                caches = self._write_slot(caches, row, jnp.int32(b))
+                logits = jax.block_until_ready(logits)
+                jax.block_until_ready(caches)
+                stats.prefill_s += time.perf_counter() - t0
+                stats.prefill_tokens += len(r.tokens)
+                stats.admitted += 1
+                lg = np.asarray(logits[0, -1], np.float32)
+                skey = jax.random.fold_in(base_key, r.uid)
+                if greedy:
+                    first = int(lg.argmax())
+                else:
+                    first = int(jax.random.categorical(
+                        jax.random.fold_in(skey, 0), lg / temperature))
+                slot_req[b] = r
+                keys[b] = np.asarray(skey, np.uint32)
+                tok[b] = first
+                pos[b] = frontend + len(r.tokens)
+                n_gen[b] = 1
+                limit[b] = r.max_new_tokens
+                buf[b] = 0
+                buf[b, 0] = first
+                done_now = (r.max_new_tokens <= 1
+                            or (eos_id is not None and first == eos_id))
+                active[b] = not done_now
+                if done_now:
+                    retire(b)
+            if not active.any():
+                continue            # all admitted work finished; drain queue
+            # -------- one decode chunk (compiled once per shape)
+            t0 = time.perf_counter()
+            out = chunk_fn(self.params, caches, jnp.asarray(tok),
+                           jnp.asarray(pos), jnp.asarray(active),
+                           jnp.asarray(n_gen), jnp.asarray(limit),
+                           jnp.asarray(buf), jnp.asarray(keys),
+                           jnp.float32(temperature if temperature > 0 else 1))
+            out = jax.block_until_ready(out)
+            caches, tok_d, pos_d, act_d, n_d, buf_d, steps = out
+            stats.decode_s += time.perf_counter() - t0
+            prev_total = int(n_gen.sum())
+            # writable host mirrors (np.asarray of a jax array is read-only)
+            tok = np.array(tok_d)
+            pos = np.array(pos_d)
+            act_new = np.array(act_d)
+            n_gen = np.array(n_d)
+            buf = np.array(buf_d)
+            stats.decode_steps += int(steps)
+            stats.decode_tokens += int(n_gen.sum()) - prev_total
+            # -------- retire slots that finished inside the chunk
+            for b in range(slots):
+                if slot_req[b] is not None and active[b] and not act_new[b]:
+                    active[b] = False
+                    retire(b)
+            active = act_new
+
+        self.last_stats = stats
+        return [completions[r.uid] for r in requests]
+
+    # ------------------------------------------------------------- legacy
     def generate(self, batch: Dict[str, jax.Array], steps: int,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> GenerationResult:
+        """Fixed-batch generation (legacy API).  Greedy LM decoding runs on
+        the continuous-batching engine; the enc-dec audio family,
+        temperature sampling (its key schedule is batch-shaped and is
+        preserved bit-for-bit), and rolling-cache workloads where
+        prompt + steps exceed max_len keep the original per-token loop."""
+        frontend = (self.cfg.frontend_tokens
+                    if self.cfg.frontend and self.cfg.family != "audio" else 0)
+        need = frontend + batch["tokens"].shape[1] + steps
+        if (self.cfg.family == "audio"
+                or (temperature > 0.0 and key is not None)
+                or need > self.max_len):
+            return self._generate_per_token(batch, steps, temperature, key)
+        rows = np.asarray(batch["tokens"])
+        fes = batch.get("frontend_embeds")
+        reqs = [Request(uid=i, tokens=rows[i].tolist(), max_new_tokens=steps,
+                        frontend_embeds=None if fes is None else fes[i])
+                for i in range(rows.shape[0])]
+        outs = self.run(reqs, temperature=0.0, eos_id=None)
+        return GenerationResult(tokens=[c.tokens for c in outs], steps=steps)
+
+    def _generate_per_token(self, batch, steps, temperature, key):
         caches, logits = self._prefill(self.params, batch)
         pos0 = batch["tokens"].shape[1]
         if self.cfg.frontend and self.cfg.family != "audio":

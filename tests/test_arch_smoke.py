@@ -12,6 +12,9 @@ from repro.configs.base import ShapeSpec
 from repro.configs.shapes import input_specs, materialize
 from repro.models import encdec, transformer
 
+# full per-arch compile sweep (~4 min): excluded from scripts/ci_fast.sh
+pytestmark = pytest.mark.slow
+
 SMOKE_SHAPE = ShapeSpec("smoke", "train", 32, 2)
 
 

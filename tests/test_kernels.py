@@ -11,6 +11,9 @@ from repro.core import routed_ffn as rf
 from repro.core import lora as lora_mod
 from repro.core.params import init_tree
 
+# interpret-mode shape/dtype sweeps (~2-3 min): excluded from ci_fast.sh
+pytestmark = pytest.mark.slow
+
 
 def _cb(head_dim, code_dim=8, e=16, seed=0):
     cfg = pq.PQConfig(head_dim=head_dim, code_dim=code_dim, num_codewords=e)

@@ -1,0 +1,193 @@
+"""Continuous-batching engine tests: scanned-loop vs per-token greedy
+equivalence, EOS early exit, ragged prompts, and slot recycling under
+more requests than slots.
+
+All tests share one Engine (module fixture) and one generation budget so
+the compiled decode chunk is traced exactly once for the whole module."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.params import init_tree
+from repro.models import transformer
+from repro.serving.engine import Engine, Request
+from repro.train.state import model_defs
+
+MAX_LEN, SLOTS, GEN, CHUNK = 48, 3, 6, 4
+
+
+def _tiny_cfg():
+    # full dispatcher slack so capacity drops don't add noise to the
+    # per-token-loop comparisons (cf. test_system's parity test)
+    return dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256).with_spt(ffn_capacity_factor=8.0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params, Engine(cfg, params, max_len=MAX_LEN,
+                               num_slots=SLOTS, decode_chunk=CHUNK)
+
+
+def _ref_steps(cfg, max_len):
+    """Jitted prefill/decode exactly like the pre-refactor Engine built."""
+    prefill = jax.jit(lambda params, toks: transformer.lm_prefill(
+        params, cfg, {"tokens": toks}, max_len=max_len))
+    decode = jax.jit(lambda params, caches, tok, pos:
+                     transformer.lm_decode_step(params, cfg, caches, tok,
+                                                pos))
+    return prefill, decode
+
+
+def _per_token_greedy(cfg, params, tokens, steps, max_len=MAX_LEN):
+    """The pre-refactor Engine.generate loop: batched prefill + one Python
+    decode call per token, scalar positions, greedy argmax."""
+    key = (cfg.name, max_len)
+    if key not in _per_token_greedy.cache:
+        _per_token_greedy.cache[key] = _ref_steps(cfg, max_len)
+    prefill, decode = _per_token_greedy.cache[key]
+    caches, logits = prefill(params, tokens)
+    pos0 = tokens.shape[1]
+    outs = [jnp.argmax(logits[:, -1], -1).astype(jnp.int32)]
+    for t in range(1, steps):
+        caches, logits = decode(params, caches, outs[-1],
+                                jnp.asarray(pos0 + t - 1, jnp.int32))
+        outs.append(jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
+    return jnp.stack(outs, 1).tolist()
+
+
+_per_token_greedy.cache = {}
+
+
+def _prompts(cfg, lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=ln,
+                         dtype=np.int32).tolist() for ln in lens]
+
+
+def test_scanned_loop_matches_per_token_loop(tiny):
+    cfg, params, eng = tiny
+    toks = jnp.asarray(np.stack(_prompts(cfg, [16] * 4)))
+    ref = _per_token_greedy(cfg, params, toks, steps=GEN)
+    out = eng.run([Request(uid=i, tokens=np.asarray(toks)[i].tolist(),
+                           max_new_tokens=GEN) for i in range(4)])
+    assert [c.tokens for c in out] == ref
+    # trace-once property: one compiled chunk serves the whole run
+    assert len(eng._chunk_cache) == 1
+    assert eng.last_stats.decode_tokens == 4 * (GEN - 1)  # 1st is prefill's
+
+
+def test_slot_recycling_more_requests_than_slots(tiny):
+    cfg, params, eng = tiny
+    prompts = _prompts(cfg, [16] * 5, seed=2)
+    out = eng.run([Request(uid=i, tokens=p, max_new_tokens=GEN)
+                   for i, p in enumerate(prompts)])
+    assert eng.last_stats.admitted == 5 and eng.last_stats.completed == 5
+    for i, p in enumerate(prompts):                 # row-for-row vs solo run
+        ref = _per_token_greedy(cfg, params, jnp.asarray([p]), GEN)
+        assert out[i].tokens == ref[0], f"request {i}"
+
+
+def test_ragged_prompt_lengths(tiny):
+    cfg, params, eng = tiny
+    # default SPT config (sparse MHA + routed FFN) is not pad-invariant,
+    # so these ragged prompts take the exact-length prefill path
+    assert not eng._pad_invariant()
+    lens = [5, 9, 16, 11]
+    prompts = _prompts(cfg, lens)
+    out = eng.run([Request(uid=i, tokens=p, max_new_tokens=GEN)
+                   for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        ref = _per_token_greedy(cfg, params, jnp.asarray([p]), GEN)
+        assert out[i].tokens == ref[0], f"len={lens[i]}"
+        assert out[i].prompt_len == lens[i]
+
+
+def test_eos_early_exit(tiny):
+    cfg, params, eng = tiny
+    prompts = _prompts(cfg, [16, 16], seed=3)
+    free = [c.tokens for c in eng.run(
+        [Request(uid=i, tokens=p, max_new_tokens=GEN)
+         for i, p in enumerate(prompts)])]
+    eos = free[0][2]                      # greedy token 3 of request 0
+    out = eng.run([Request(uid=i, tokens=p, max_new_tokens=GEN)
+                   for i, p in enumerate(prompts)], eos_id=eos)
+    assert out[0].tokens == free[0][:3]
+    assert out[0].finish_reason == "eos"
+    cut = free[1].index(eos) + 1 if eos in free[1] else len(free[1])
+    assert out[1].tokens == free[1][:cut]
+    assert eng.last_stats.decode_tokens < 2 * (GEN - 1)  # the exit saved work
+
+
+def test_generate_legacy_api_matches_old_loop(tiny):
+    cfg, params, eng = tiny
+    toks = jnp.asarray(np.stack(_prompts(cfg, [16] * 3, seed=4)))
+    ref = _per_token_greedy(cfg, params, toks, steps=GEN)
+    got = eng.generate({"tokens": toks}, steps=GEN)
+    assert got.tokens == ref and got.steps == GEN
+
+
+def test_duplicate_request_uids_rejected(tiny):
+    _, _, eng = tiny
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.run([Request(uid=0, tokens=[1, 2], max_new_tokens=2),
+                 Request(uid=0, tokens=[3, 4], max_new_tokens=2)])
+
+
+def test_bucketed_padding_is_output_invariant():
+    """Dense (SPT-off) stacks bucket ragged prompts to power-of-2 pads;
+    the padding must not change real-token outputs vs exact-length
+    prefill.  (Sparse-MHA / routed-FFN configs skip bucketing entirely:
+    top-L budgets and capacity dispatch would see the pad tokens.)"""
+    cfg = dataclasses.replace(_tiny_cfg(), name="tiny-dense").with_spt(
+        sparse_mha=False, routed_ffn=False)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=MAX_LEN, num_slots=2, decode_chunk=4)
+    assert eng._pad_invariant() and eng._pad_len(9) == 16
+    prompts = _prompts(cfg, [5, 9, 11], seed=6)
+    out = eng.run([Request(uid=i, tokens=p, max_new_tokens=4)
+                   for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        ref = _per_token_greedy(cfg, params, jnp.asarray([p]), 4)
+        assert out[i].tokens == ref[0], f"len={len(p)}"
+
+
+def test_sliding_window_prompt_longer_than_window():
+    """SWA ring caches hold only the last `window` positions, so the engine
+    must prefill at exact length (right-padding would displace real KV out
+    of the ring) — outputs must match the per-token loop."""
+    cfg = dataclasses.replace(_tiny_cfg(), name="tiny-swa", window=8)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    assert transformer.supports_ragged_prefill(cfg)
+    eng = Engine(cfg, params, max_len=MAX_LEN, num_slots=2, decode_chunk=4)
+    prompts = _prompts(cfg, [12, 6], seed=5)     # 12 > window=8
+    out = eng.run([Request(uid=i, tokens=p, max_new_tokens=4)
+                   for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        ref = _per_token_greedy(cfg, params, jnp.asarray([p]), 4)
+        assert out[i].tokens == ref[0], f"len={len(p)}"
+
+
+@pytest.mark.slow
+def test_recurrent_arch_exact_length_prefill():
+    """Non-attention stacks can't right-pad prompts (state corruption);
+    the engine prefills them at exact length — outputs must still match
+    the per-token loop, including under slot recycling."""
+    cfg = configs.get_smoke("mamba2-780m")
+    assert not transformer.supports_ragged_prefill(cfg)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, [7, 12])
+    eng = Engine(cfg, params, max_len=32, num_slots=1, decode_chunk=4)
+    out = eng.run([Request(uid=i, tokens=p, max_new_tokens=3)
+                   for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        ref = _per_token_greedy(cfg, params, jnp.asarray([p]), 3, max_len=32)
+        assert out[i].tokens == ref[0], f"request {i}"

@@ -25,6 +25,7 @@ def _tiny_cfg():
         num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256)
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg = _tiny_cfg()
     steps = 60
@@ -40,6 +41,7 @@ def test_training_reduces_loss():
     assert all(np.isfinite(l) for l in losses)
 
 
+@pytest.mark.slow
 def test_resume_continues_from_checkpoint(tmp_path):
     cfg = _tiny_cfg()
     d = str(tmp_path / "ck")
@@ -66,6 +68,7 @@ def test_serve_after_training_deterministic():
     assert a.tokens == b.tokens
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-780m",
                                   "recurrentgemma-9b"])
 def test_decode_matches_train_forward(arch):
