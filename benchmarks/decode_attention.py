@@ -1,0 +1,110 @@
+"""Decode sparse-attention benchmark: jnp gather fallback vs the fused
+decode formulation, swept over (S, top_fraction, GQA heads).
+
+    PYTHONPATH=src python -m benchmarks.decode_attention \
+        [--pallas] [--out BENCH_decode.json]
+
+Implementations timed per row (all selection-identical; see
+tests/test_sparse_decode.py):
+
+  jnp    — sa.sparse_mha_decode: the serving fallback (bucket_select index
+           emission + grouped gather attention; GQA reshape form, no
+           cache repeats)
+  fused  — sa.sparse_mha_decode_masked: the fused-kernel-equivalent masked
+           execution (threshold histogram -> mask on grouped dense logits;
+           no index compaction, no gather).  On a non-TPU device this is
+           the XLA-executable stand-in for the Pallas kernel's compute
+           graph, the same convention as benchmarks/table5_kernels.py —
+           the real kernel additionally skips ineligible key tiles and
+           keeps the (S,) score row in VMEM.
+  pallas — kernels/sparse_attention/ops.sparse_mha_decode.  Off-TPU it
+           runs interpret=True, a CORRECTNESS mode orders of magnitude off
+           hardware speed, so it is gated behind --pallas and its timing
+           is never a speed claim on CPU.
+
+Emits one JSON line per row and writes the aggregate to --out
+(committed as BENCH_decode.json at the repo root: the decode-throughput
+trajectory baseline tracked per PR).
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import pq
+from repro.core import sparse_attention as sa
+from repro.core.params import init_tree
+from repro.kernels.sparse_attention import ops as sa_ops
+
+
+def bench_row(s: int, frac: float, hq: int, hk: int, gran: str, *,
+              b: int = 4, d: int = 64, run_pallas: bool = False) -> dict:
+    pcfg = pq.PQConfig(head_dim=d, code_dim=8, num_codewords=16)
+    cb = init_tree(pq.param_defs(pcfg), jax.random.PRNGKey(0))["codebooks"]
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=frac, min_l=16,
+                                    select_granularity=gran)
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d))
+    k = jax.random.normal(ks[1], (b, hk, s, d))
+    v = jax.random.normal(ks[2], (b, hk, s, d))
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    kv_valid = jnp.ones((b, s), bool)
+    scale = d ** -0.5
+
+    f_jnp = jax.jit(lambda q, k, v, c, kv: sa.sparse_mha_decode(
+        q, k, v, c, cb, scfg, scale, kv))
+    f_fused = jax.jit(lambda q, k, v, c, kv: sa.sparse_mha_decode_masked(
+        q, k, v, c, cb, scfg, scale, kv))
+    row = {
+        "s": s, "l": sa.top_l(s, scfg, None), "frac": frac, "hq": hq,
+        "hk": hk, "granularity": gran, "batch": b, "head_dim": d,
+        "jnp_us": round(time_fn(f_jnp, q, k, v, codes, kv_valid), 1),
+        "fused_us": round(time_fn(f_fused, q, k, v, codes, kv_valid), 1),
+    }
+    row["fused_speedup"] = round(row["jnp_us"] / row["fused_us"], 2)
+    if run_pallas:
+        interp = jax.devices()[0].platform != "tpu"
+        f_pl = lambda q, k, v, c, kv: sa_ops.sparse_mha_decode(
+            q, k, v, c, cb, scfg, scale, kv, interpret=interp)
+        row["pallas_us"] = round(
+            time_fn(f_pl, q, k, v, codes, kv_valid, iters=3, warmup=1), 1)
+        row["pallas_interpret"] = interp
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--pallas", action="store_true",
+                    help="also time the Pallas kernel (interpret mode off-"
+                         "TPU: correctness only, not a speed signal)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seqs", type=int, nargs="*",
+                    default=[512, 2048, 8192])
+    args = ap.parse_args()
+
+    platform = jax.devices()[0].platform
+    note = ("fused == sparse_mha_decode_masked, the kernel-equivalent XLA "
+            "execution (table5 convention: the CPU/GPU stand-in for the "
+            "Pallas decode kernel; on TPU, time the kernel itself with "
+            "--pallas).  jnp == the gather fallback serving default.")
+    rows = []
+    sweeps = [(s, 0.125, 8, 2, g) for s in args.seqs for g in ("qhead",
+                                                               "kvgroup")]
+    sweeps += [(2048, 0.125, 8, 8, "qhead"), (2048, 0.25, 8, 2, "qhead")]
+    for s, frac, hq, hk, gran in sweeps:
+        row = bench_row(s, frac, hq, hk, gran, b=args.batch,
+                        run_pallas=args.pallas and s == min(args.seqs))
+        rows.append(row)
+        print(json.dumps(row))
+    out = {"bench": "decode_attention", "device": platform, "note": note,
+           "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,9 +25,23 @@ from repro.train.state import model_defs
 from benchmarks.common import scale_note
 
 
+def _variant_cfg(cfg, variant: str):
+    """Serving variants tracked per PR: the dense baseline, the sparse-MHA
+    jnp decode fallback, and the fused Pallas decode kernel path
+    (interpret-mode off-TPU — compare kernel rows across PRs, not against
+    the jnp rows, on CPU)."""
+    if variant == "dense":
+        return cfg.with_spt(sparse_mha=False)
+    if variant == "sparse":
+        return cfg.with_spt(sparse_mha=True, decode_attn_impl="jnp")
+    if variant == "sparse-kernel":
+        return cfg.with_spt(sparse_mha=True, decode_attn_impl="kernel")
+    raise ValueError(variant)
+
+
 def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
-          decode_chunk: int, ragged: bool) -> dict:
-    cfg = configs.get_smoke(arch)
+          decode_chunk: int, ragged: bool, variant: str = "sparse") -> dict:
+    cfg = _variant_cfg(configs.get_smoke(arch), variant)
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     engine = Engine(cfg, params, max_len=prompt_len + gen + 8,
                     num_slots=slots, decode_chunk=decode_chunk)
@@ -42,7 +56,8 @@ def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
     steady_wall = time.perf_counter() - t0
     s = engine.last_stats
     return {
-        "arch": cfg.name, "requests": requests, "slots": slots,
+        "arch": cfg.name, "variant": variant, "requests": requests,
+        "slots": slots,
         "prompt_len": prompt_len, "gen": gen, "ragged": ragged,
         "compile_s": round(first_wall - steady_wall, 2),
         "steady_wall_s": round(steady_wall, 2),
@@ -61,13 +76,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--decode-chunk", type=int, default=16)
+    ap.add_argument("--variants", default="dense,sparse",
+                    help="comma list of dense|sparse|sparse-kernel "
+                         "(sparse-kernel = fused Pallas decode; interpret "
+                         "mode off-TPU, so opt-in)")
     args = ap.parse_args()
 
     print(json.dumps({"note": scale_note()}))
-    for ragged in (False, True):
-        row = bench(args.arch, args.requests, args.slots, args.prompt_len,
-                    args.gen, args.decode_chunk, ragged)
-        print(json.dumps(row))
+    for variant in args.variants.split(","):
+        for ragged in (False, True):
+            row = bench(args.arch, args.requests, args.slots,
+                        args.prompt_len, args.gen, args.decode_chunk,
+                        ragged, variant=variant.strip())
+            print(json.dumps(row))
 
 
 if __name__ == "__main__":

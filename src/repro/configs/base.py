@@ -30,6 +30,10 @@ class SPTConfig:
     select_granularity: str = "qhead"   # "kvgroup" = GQA-shared selection opt
     chunk_q: int = 256
     attn_impl: str = "sparse_jnp"   # sparse_jnp | dense | pallas
+    # decode-time sparse attention path: "kernel" = fused Pallas decode
+    # kernel, "jnp" = sa.sparse_mha_decode fallback, "auto" = follow
+    # attn_impl ("pallas" -> kernel).  REPRO_DISABLE_KERNELS=1 forces jnp.
+    decode_attn_impl: str = "auto"  # auto | kernel | jnp
     # routed FFN (§4.2): G groups, G' active (beta = G'/G)
     ffn_groups: int = 8
     ffn_active_groups: int = 4

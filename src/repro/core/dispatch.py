@@ -111,6 +111,37 @@ def combine(y: jax.Array, plan: DispatchPlan, seq_len: int) -> jax.Array:
     return out[:, :seq_len]
 
 
+# ------------------------------------------------------ kernel dispatch
+# The second dispatch concern this module owns: which *execution path* a
+# layer lowers through.  Kernel selection is a trace-time decision (shapes
+# are static under jit), gated by one global kill switch plus per-feature
+# config flags, so the jnp fallbacks stay one env var away for debugging
+# and CI bisection.
+
+def kernels_disabled() -> bool:
+    """REPRO_DISABLE_KERNELS=1 forces every jnp fallback path (checked at
+    trace time; unset/0/false = kernels allowed)."""
+    import os
+    return os.environ.get("REPRO_DISABLE_KERNELS", "0").strip().lower() \
+        not in ("", "0", "false")
+
+
+def use_sparse_decode_kernel(cfg) -> bool:
+    """Should sparse-MHA decode lower through the fused Pallas kernel?
+
+    cfg is a ModelConfig (duck-typed — importing configs here would cycle).
+    spt.decode_attn_impl: "kernel" | "jnp" | "auto" (auto follows the
+    train/prefill attn_impl, i.e. kernels on iff attn_impl == "pallas").
+    REPRO_DISABLE_KERNELS=1 overrides everything.
+    """
+    if kernels_disabled():
+        return False
+    impl = getattr(cfg.spt, "decode_attn_impl", "auto")
+    if impl == "auto":
+        return cfg.spt.attn_impl == "pallas"
+    return impl == "kernel"
+
+
 def load_balance_loss(router_probs: jax.Array, choice: jax.Array,
                       num_groups: int) -> jax.Array:
     """Switch-style auxiliary loss (paper §4.2 'load-balancing loss'):

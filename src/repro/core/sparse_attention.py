@@ -318,6 +318,45 @@ def sparse_mha_masked(q: jax.Array, k: jax.Array, v: jax.Array,
     return out, aux
 
 
+def _decode_attention_from_indices(q: jax.Array, k: jax.Array, v: jax.Array,
+                                   indices: jax.Array, valid: jax.Array,
+                                   scale: float) -> jax.Array:
+    """Single-token gather attention, grouped by kv head so no (B, Hq, S, d)
+    repeat of the cache ever materializes (the train-time
+    attention_from_indices repeats KV for SPMD scatter reasons that don't
+    apply to the inference-only decode path).
+
+    q: (B, Hq, 1, d); k, v: (B, Hk, S, d); indices/valid: (B, Hsel, 1, L)
+    with Hsel = Hk ("kvgroup" shared selection) or Hq (per-head).
+    """
+    from repro.sharding import shard
+    b, hq, _, d = q.shape
+    _, hk, _, _ = k.shape
+    r = hq // hk
+    l = indices.shape[-1]
+    rsel = indices.shape[1] // hk                        # 1 | R
+    idx = indices.reshape(b, hk, rsel * l, 1)
+    k_sel = jnp.take_along_axis(k, idx, axis=2).reshape(b, hk, rsel, l, d)
+    v_sel = jnp.take_along_axis(v, idx, axis=2).reshape(b, hk, rsel, l, d)
+    k_sel = shard(k_sel, "batch", "kv_heads", None, None, None)
+    v_sel = shard(v_sel, "batch", "kv_heads", None, None, None)
+    qg = q.reshape(b, hk, r, d)
+    vld = valid.reshape(b, hk, rsel, l)
+    if rsel == 1:                                        # selection shared by
+        k_sel, v_sel = k_sel[:, :, 0], v_sel[:, :, 0]    # the group's R heads
+        logits = jnp.einsum("bgrd,bgld->bgrl", qg, k_sel,
+                            preferred_element_type=jnp.float32) * scale
+    else:
+        logits = jnp.einsum("bgrd,bgrld->bgrl", qg, k_sel,
+                            preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(vld, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(vld, w, 0.0)                           # all-invalid rows -> 0
+    eq = "bgrl,bgld->bgrd" if rsel == 1 else "bgrl,bgrld->bgrd"
+    out = jnp.einsum(eq, w.astype(v_sel.dtype), v_sel)
+    return shard(out.reshape(b, hq, 1, d), "batch", "heads", None, None)
+
+
 def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                       codes_cache: jax.Array, codebooks: jax.Array,
                       cfg: SparseAttentionConfig, scale: float,
@@ -327,6 +366,11 @@ def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     q: (B, Hq, 1, d); caches: (B, Hk, S, d); codes_cache: (B, Hk, S, M)
     kv_valid: (B, S) bool — which cache slots participate (covers both plain
     causal caches and ring-buffer sliding-window caches).
+
+    This is the jnp fallback and the parity oracle for the fused Pallas
+    decode kernel (kernels/sparse_attention/ops.sparse_mha_decode).  All
+    GQA broadcasting is by reshape — no cache tensor is jnp.repeat-ed
+    across query heads, so the fallback stays usable at long S.
     """
     b, hq, _, d = q.shape
     _, hk, s, _ = k_cache.shape
@@ -334,21 +378,54 @@ def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     l = top_l(s, cfg, None)
     codes_q = pq.assign(q, codebooks)                    # (B, Hq, 1, M)
     ck = codes_cache.astype(jnp.int32)                   # (B, Hk, S, M)
+    cq = codes_q.reshape(b, hk, r, 1, -1)
+    scores = pq.match_scores(cq, ck[:, :, None], cfg.pq.num_codewords)
     if cfg.select_granularity == "kvgroup":
-        cq = codes_q.reshape(b, hk, r, 1, -1)
-        scores = pq.match_scores(cq, ck[:, :, None], cfg.pq.num_codewords)
         scores = jnp.sum(scores, axis=2)                 # (B, Hk, 1, S)
     else:
-        ckq = jnp.repeat(ck, r, axis=1)                  # (B, Hq, S, M)
-        scores = pq.match_scores(codes_q, ckq, cfg.pq.num_codewords)
+        scores = scores.reshape(b, hq, 1, s)             # (B, Hq, 1, S)
     valid = kv_valid[:, None, None, :]                   # (B, 1, 1, S)
     max_s = cfg.pq.num_books * (r if cfg.select_granularity == "kvgroup"
                                 else 1)
     idx, vld = bucket_select(scores, valid, l, max_s)
+    return _decode_attention_from_indices(q, k_cache, v_cache, idx, vld,
+                                          scale)
+
+
+def sparse_mha_decode_masked(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, codes_cache: jax.Array,
+                             codebooks: jax.Array,
+                             cfg: SparseAttentionConfig, scale: float,
+                             kv_valid: jax.Array) -> jax.Array:
+    """Fused-kernel-equivalent decode execution: the top-L set is applied as
+    a MASK on grouped dense logits — no (1, L) index row, no gathered K/V,
+    no bucket_select compaction.  Same selection semantics as
+    sparse_mha_decode; this is the XLA-executable stand-in for the Pallas
+    decode kernel's compute graph (benchmarks/decode_attention.py) — the
+    kernel additionally skips ineligible key tiles and never writes the
+    (S,) score row to HBM."""
+    b, hq, _, d = q.shape
+    _, hk, s, _ = k_cache.shape
+    r = hq // hk
+    l = top_l(s, cfg, None)
+    codes_q = pq.assign(q, codebooks)
+    ck = codes_cache.astype(jnp.int32)
+    cq = codes_q.reshape(b, hk, r, 1, -1)
+    scores = pq.match_scores(cq, ck[:, :, None], cfg.pq.num_codewords)
+    valid = kv_valid[:, None, None, None, :]             # (B, 1, 1, 1, S)
     if cfg.select_granularity == "kvgroup":
-        idx = jnp.repeat(idx, r, axis=1)
-        vld = jnp.repeat(vld, r, axis=1)
-    return attention_from_indices(q, k_cache, v_cache, idx, vld, scale)
+        ssum = jnp.sum(scores, axis=2, keepdims=True)    # (B, Hk, 1, 1, S)
+        eligible = _eligibility(ssum, valid, l, cfg.pq.num_books * r)
+    else:
+        eligible = _eligibility(scores, valid, l, cfg.pq.num_books)
+    qg = q.reshape(b, hk, r, 1, d)
+    logits = jnp.einsum("bgrnd,bgsd->bgrns", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(eligible, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(eligible, w, 0.0)
+    out = jnp.einsum("bgrns,bgsd->bgrnd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, hq, 1, d)
 
 
 def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, scale: float,

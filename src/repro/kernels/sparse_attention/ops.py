@@ -1,10 +1,14 @@
-"""Public fused sparse MHA op: Pallas forward, ref (jnp) backward.
+"""Public fused sparse MHA ops: Pallas forward, ref (jnp) backward.
 
-Forward = pq_assign kernel + bucket-histogram kernel + fused attention
-kernel.  Backward differentiates the reference implementation, which selects
-the identical top-L set (same integer thresholds and tie rule), so the
-gradient is consistent with the fused forward up to float associativity —
-the same contract the paper's unit tests check (§A.2, Figure 11).
+Train/prefill (`sparse_mha`): pq_assign kernel + bucket-histogram kernel +
+fused attention kernel.  Backward differentiates the reference
+implementation, which selects the identical top-L set (same integer
+thresholds and tie rule), so the gradient is consistent with the fused
+forward up to float associativity — the same contract the paper's unit
+tests check (§A.2, Figure 11).
+
+Serving decode (`sparse_mha_decode`): decode-threshold kernel + fused
+single-token attention kernel over the KV cache; inference-only, no VJP.
 """
 from __future__ import annotations
 
@@ -14,11 +18,13 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import pq
 from repro.core import sparse_attention as sa
 from repro.kernels.pq_quantize.ops import pq_assign
-from repro.kernels.sparse_attention.sparse_attention import \
-    sparse_attention_kernel
-from repro.kernels.topl_select.topl_select import topl_thresholds_kernel
+from repro.kernels.sparse_attention.sparse_attention import (
+    sparse_attention_kernel, sparse_decode_attention_kernel)
+from repro.kernels.topl_select.topl_select import (
+    decode_topl_thresholds_kernel, topl_thresholds_kernel)
 
 
 def _fused_forward(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
@@ -89,7 +95,64 @@ def sparse_mha(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
                          q_offset, interpret)
     aux = {"l": jnp.asarray(sa.top_l(k.shape[2], cfg, window), jnp.int32)}
     if cfg.qerr_loss_weight > 0:
-        from repro.core import pq as pq_core
-        aux["qerr"] = (pq_core.quantization_error(q, codebooks)
-                       + pq_core.quantization_error(k, codebooks))
+        aux["qerr"] = (pq.quantization_error(q, codebooks)
+                       + pq.quantization_error(k, codebooks))
     return out, aux
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scale", "tile_k",
+                                             "interpret"))
+def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                      codes_cache: jax.Array, codebooks: jax.Array,
+                      cfg: sa.SparseAttentionConfig, scale: float,
+                      kv_valid: jax.Array, *, tile_k: int = 512,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Drop-in replacement for core.sparse_attention.sparse_mha_decode:
+    decode-threshold kernel + fused decode attention kernel.
+
+    q: (B, Hq, 1, d); caches: (B, Hk, S, d); codes_cache: (B, Hk, S, M);
+    kv_valid: (B, S) bool.  Inference-only — no VJP (the jnp fallback stays
+    the oracle; tests/test_sparse_decode.py asserts parity).
+    interpret=None derives the mode from the backend (compiled on TPU,
+    interpreter elsewhere), so the serving path needs no plumbing.
+
+    The 1-token query codes are assigned on the jnp path (O(B*Hq*M*E), far
+    below kernel-launch granularity and bit-identical to the fallback's);
+    all O(S) work — code matching, threshold histogram, attention — runs in
+    the two Pallas kernels, with the R query heads of each kv group packed
+    on the sublane axis so no cache tensor is repeated across query heads.
+
+    A cache length that is not a multiple of tile_k is zero-padded up to
+    one (padded slots carry kv_valid=0, which the selection treats exactly
+    like any dead slot) so the kernels keep their Tk tiling — and their
+    O(Tk) VMEM bound — at arbitrary serving max_len.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, _, d = q.shape
+    _, hk, s, _ = k_cache.shape
+    r = hq // hk
+    m = codebooks.shape[0]
+    l = sa.top_l(s, cfg, None)
+    sum_rows = cfg.select_granularity == "kvgroup"
+    max_score = cfg.pq.num_books * (r if sum_rows else 1)
+    codes_q = pq.assign(q, codebooks)                     # (B, Hq, 1, M)
+    cqg = codes_q.reshape(b * hk, r, m)
+    ckg = codes_cache.astype(jnp.int32).reshape(b * hk, s, m)
+    qg = q.reshape(b * hk, r, d)
+    kg = k_cache.reshape(b * hk, s, d)
+    vg = v_cache.reshape(b * hk, s, d)
+    kvv = kv_valid.astype(jnp.int32)                      # (B, S)
+    tk = min(tile_k, s)
+    pad = -(-s // tk) * tk - s
+    if pad:
+        zkv = ((0, 0), (0, pad), (0, 0))
+        kg, vg, ckg = (jnp.pad(t, zkv) for t in (kg, vg, ckg))
+        kvv = jnp.pad(kvv, ((0, 0), (0, pad)))            # padded -> invalid
+    thr = decode_topl_thresholds_kernel(
+        cqg, ckg, kvv, l=l, max_score=max_score, sum_rows=sum_rows,
+        heads_per_batch=hk, tile_k=tk, interpret=interpret)
+    out = sparse_decode_attention_kernel(
+        qg, kg, vg, cqg, ckg, thr, kvv, scale=scale, sum_rows=sum_rows,
+        heads_per_batch=hk, tile_k=tk, interpret=interpret)
+    return out.reshape(b, hq, 1, d)

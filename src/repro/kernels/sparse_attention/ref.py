@@ -14,3 +14,13 @@ def sparse_mha_ref(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
                    ) -> Tuple[jax.Array, dict]:
     return sa.sparse_mha(q, k, v, codebooks, cfg, scale, causal=causal,
                          window=window, q_offset=q_offset)
+
+
+def sparse_mha_decode_ref(q, k_cache, v_cache, codes_cache, codebooks,
+                          cfg: sa.SparseAttentionConfig, scale: float,
+                          kv_valid) -> jax.Array:
+    """Oracle for the fused decode kernel: the jnp fallback (bucket_select
+    over cached codes -> grouped gather attention), identical selection
+    semantics (threshold bucket + most-recent-slot ties)."""
+    return sa.sparse_mha_decode(q, k_cache, v_cache, codes_cache, codebooks,
+                                cfg, scale, kv_valid)

@@ -158,3 +158,127 @@ def sparse_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(q, k, v, codes_q, codes_k, thresholds)
+
+
+# ---------------------------------------------------------------- decode
+def _decode_attn_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, thr_ref,
+                        valid_ref, o_ref, m_ref, l_ref, acc_ref, tie_ref, *,
+                        scale, sum_rows, nkt):
+    kj = pl.program_id(1)                 # tiles visited newest slot first
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        tie_ref[...] = jnp.zeros_like(tie_ref)
+
+    cq = cq_ref[0]                        # (R, M)
+    ck = ck_ref[0]                        # (Tk, M)
+    s = _scores(cq, ck)                   # (R, Tk)
+    if sum_rows:                          # kvgroup: one shared selection
+        s = jnp.sum(s, axis=0, keepdims=True)         # (1, Tk)
+    valid = valid_ref[0] != 0             # (Tk,)
+    thr = thr_ref[0]                      # (R_out, 2)
+    t = thr[:, 0][:, None]
+    need = thr[:, 1][:, None]
+    sm = jnp.where(valid[None, :], s, -1)
+    above = sm > t
+    at_t = sm == t
+    # ties more recent (higher slot index) than position b: taken so far in
+    # previously visited (newer) tiles + ties right of b inside this tile
+    rev_incl = jnp.cumsum(at_t[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
+    rev_excl = rev_incl - at_t.astype(jnp.int32)
+    taken = tie_ref[:, 0][:, None]
+    elig_t = at_t & ((taken + rev_excl) < need)
+    eligible = above | elig_t             # (R_out, Tk)
+    tie_ref[:, 0] += jnp.sum(elig_t.astype(jnp.int32), axis=1)
+
+    @pl.when(jnp.any(eligible))
+    def _block():
+        q = q_ref[0].astype(jnp.float32)              # (R, dh)
+        k = k_ref[0].astype(jnp.float32)              # (Tk, dh)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (R, Tk)
+        logits = jnp.where(eligible, logits, -jnp.inf)        # bcast if kvgroup
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        finite = m_new > -jnp.inf
+        m_safe = jnp.where(finite, m_new, 0.0)
+        alpha = jnp.where(finite, jnp.exp(m_prev - m_safe), 1.0)
+        p = jnp.where(finite[:, None], jnp.exp(logits - m_safe[:, None]), 0.0)
+        p = jnp.where(eligible, p, 0.0)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_new
+
+    @pl.when(kj == nkt - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def sparse_decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                                   codes_q: jax.Array, codes_k: jax.Array,
+                                   thresholds: jax.Array,
+                                   kv_valid: jax.Array, *, scale: float,
+                                   sum_rows: bool, heads_per_batch: int,
+                                   tile_k: int = 512,
+                                   interpret: bool = False) -> jax.Array:
+    """Fused single-token sparse-MHA decode (PQ score -> threshold mask ->
+    online-softmax attention) over the KV cache, one pass per key tile.
+
+    GQA layout: the R query heads of one kv head ride the sublane axis —
+    q/codes_q: (G, R, ...) with G = B*Hk — so key/value/code tiles are
+    streamed ONCE per kv group instead of being jnp.repeat-ed per query
+    head.  k/v: (G, S, dh); codes_k: (G, S, M).
+
+    thresholds: (G, R_out, 2) [t, need] from decode_topl_thresholds_kernel
+    (R_out = 1 under the shared "kvgroup" selection, R per-head).
+    kv_valid: (B, S) nonzero = cache slot participates; both plain causal
+    caches and ring-buffer sliding-window caches reduce to this mask.
+
+    Key tiles are visited newest-slot-first so the most-recent-ties-first
+    budget is consumed in canonical order; tiles with no eligible key skip
+    their MXU work via pl.when.  Memory: O(Tk) VMEM tiles + (R, dh)
+    accumulators — no (S,) score row ever reaches HBM.
+    """
+    g, r, dh = q.shape
+    _, nk, _ = k.shape
+    m = codes_q.shape[-1]
+    r_out = thresholds.shape[1]
+    tk = min(tile_k, nk)
+    if nk % tk:
+        tk = nk
+    nkt = nk // tk
+    hpb = heads_per_batch
+    kernel = functools.partial(_decode_attn_kernel, scale=scale,
+                               sum_rows=sum_rows, nkt=nkt)
+    return pl.pallas_call(
+        kernel,
+        grid=(g, nkt),
+        in_specs=[
+            pl.BlockSpec((1, r, dh), lambda gi, kj: (gi, 0, 0)),
+            pl.BlockSpec((1, tk, dh), lambda gi, kj: (gi, nkt - 1 - kj, 0)),
+            pl.BlockSpec((1, tk, dh), lambda gi, kj: (gi, nkt - 1 - kj, 0)),
+            pl.BlockSpec((1, r, m), lambda gi, kj: (gi, 0, 0)),
+            pl.BlockSpec((1, tk, m), lambda gi, kj: (gi, nkt - 1 - kj, 0)),
+            pl.BlockSpec((1, r_out, 2), lambda gi, kj: (gi, 0, 0)),
+            pl.BlockSpec((1, tk), lambda gi, kj: (gi // hpb, nkt - 1 - kj)),
+        ],
+        out_specs=pl.BlockSpec((1, r, dh), lambda gi, kj: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, r, dh), q.dtype),
+        scratch_shapes=[
+            vmem((r, 1), jnp.float32),
+            vmem((r, 1), jnp.float32),
+            vmem((r, dh), jnp.float32),
+            vmem((r_out, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, k, v, codes_q, codes_k, thresholds, kv_valid)

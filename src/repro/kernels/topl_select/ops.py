@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse_attention as sa
-from repro.kernels.topl_select.topl_select import topl_thresholds_kernel
+from repro.kernels.topl_select.topl_select import (
+    decode_topl_thresholds_kernel, topl_thresholds_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -26,6 +27,21 @@ def topl_thresholds(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
     return topl_thresholds_kernel(
         codes_q, codes_k, l=l, max_score=max_score, causal=causal,
         window=window, q_offset=q_offset, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "l", "max_score", "sum_rows", "heads_per_batch", "tile_k", "interpret"))
+def decode_topl_thresholds(codes_q: jax.Array, codes_k: jax.Array,
+                           kv_valid: jax.Array, *, l: int, max_score: int,
+                           sum_rows: bool, heads_per_batch: int,
+                           tile_k: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """Decode-shaped thresholds: (G, R, M) query codes vs (G, S, M) cached
+    codes under a (B, S) validity mask -> (G, R_out, 2) [t, need]."""
+    return decode_topl_thresholds_kernel(
+        codes_q, codes_k, kv_valid.astype(jnp.int32), l=l,
+        max_score=max_score, sum_rows=sum_rows,
+        heads_per_batch=heads_per_batch, tile_k=tile_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -32,6 +32,31 @@ def thresholds_ref(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
     return jnp.stack([t, l - n_above], axis=-1).astype(jnp.int32)
 
 
+def decode_thresholds_ref(codes_q: jax.Array, codes_k: jax.Array,
+                          kv_valid: jax.Array, *, l: int, max_score: int,
+                          sum_rows: bool) -> jax.Array:
+    """Decode-shaped oracle: (G, R, M) query codes vs (G, S, M) cached key
+    codes under a (B, S) validity mask (G = B * heads) -> (G, R_out, 2).
+    sum_rows=True sums the R rows' match counts first ("kvgroup")."""
+    g, r, m = codes_q.shape
+    nk = codes_k.shape[1]
+    b = kv_valid.shape[0]
+    s = jnp.sum(
+        (codes_q[:, :, None, :] == codes_k[:, None, :, :]).astype(jnp.int32),
+        axis=-1)                                        # (G, R, S)
+    if sum_rows:
+        s = jnp.sum(s, axis=1, keepdims=True)           # (G, 1, S)
+    valid = jnp.repeat(kv_valid != 0, g // b, axis=0)[:, None, :]
+    sm = jnp.where(valid, s, -1)
+    counts = jnp.stack([jnp.sum((sm == v).astype(jnp.int32), axis=-1)
+                        for v in range(max_score + 1)], axis=-1)
+    ge = jnp.cumsum(counts[..., ::-1], axis=-1)[..., ::-1]
+    t = jnp.maximum(jnp.sum((ge >= l).astype(jnp.int32), axis=-1) - 1, 0)
+    ge_pad = jnp.concatenate([ge, jnp.zeros_like(ge[..., :1])], axis=-1)
+    n_above = jnp.take_along_axis(ge_pad, (t + 1)[..., None], axis=-1)[..., 0]
+    return jnp.stack([t, l - n_above], axis=-1).astype(jnp.int32)
+
+
 def topl_select_ref(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
                     max_score: int, causal: bool, window: Optional[int],
                     q_offset: int = 0) -> Tuple[jax.Array, jax.Array]:

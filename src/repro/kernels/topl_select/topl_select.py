@@ -111,3 +111,79 @@ def vmem(shape, dtype):
     """VMEM scratch allocation (works under interpret=True on CPU too)."""
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------- decode
+def _decode_hist_kernel(cq_ref, ck_ref, valid_ref, thr_ref, hist_ref, *,
+                        max_score, l, sum_rows, nkt):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    cq = cq_ref[0]                                # (R, M)
+    ck = ck_ref[0]                                # (Tk, M)
+    s = _scores(cq, ck)                           # (R, Tk)
+    if sum_rows:                                  # GQA-shared ("kvgroup"):
+        s = jnp.sum(s, axis=0, keepdims=True)     # one selection per kv head
+    valid = valid_ref[0] != 0                     # (Tk,)
+    sm = jnp.where(valid[None, :], s, -1)         # (R_out, Tk)
+    for v in range(max_score + 1):
+        hist_ref[:, v] += jnp.sum((sm == v).astype(jnp.int32), axis=1)
+
+    @pl.when(ki == nkt - 1)
+    def _finish():
+        hist = hist_ref[...]                      # (R_out, max_score+1)
+        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
+        meets = (ge >= l).astype(jnp.int32)
+        t = jnp.maximum(jnp.sum(meets, axis=1) - 1, 0)
+        ge_pad = jnp.concatenate(
+            [ge, jnp.zeros((hist.shape[0], 1), jnp.int32)], axis=1)
+        n_above = jnp.take_along_axis(ge_pad, (t + 1)[:, None], axis=1)[:, 0]
+        thr_ref[0] = jnp.stack([t, l - n_above], axis=1).astype(jnp.int32)
+
+
+def decode_topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array,
+                                  kv_valid: jax.Array, *, l: int,
+                                  max_score: int, sum_rows: bool,
+                                  heads_per_batch: int, tile_k: int = 512,
+                                  interpret: bool = False) -> jax.Array:
+    """Decode-shaped threshold pass: one query token per group.
+
+    codes_q: (G, R, M) — the R query heads sharing one kv head (G = B*Hk);
+    codes_k: (G, S, M) cached key codes; kv_valid: (B, S) nonzero = slot
+    participates (plain causal caches and ring-buffer SWA caches both reduce
+    to this mask — no positional logic in-kernel).
+
+    sum_rows=True is the "kvgroup" granularity: the R heads' match counts
+    are summed (score in [0, R*M]) and ONE threshold is emitted per kv head;
+    sum_rows=False ("qhead") keeps a per-row histogram.  No jnp.repeat of
+    codes across query heads in either mode.
+
+    Returns (G, R_out, 2) int32 [threshold bucket, tie budget],
+    R_out = 1 if sum_rows else R.
+    """
+    g, r, m = codes_q.shape
+    _, nk, _ = codes_k.shape
+    tk = min(tile_k, nk)
+    if nk % tk:
+        tk = nk
+    nkt = nk // tk
+    r_out = 1 if sum_rows else r
+    hpb = heads_per_batch
+    kernel = functools.partial(_decode_hist_kernel, max_score=max_score, l=l,
+                               sum_rows=sum_rows, nkt=nkt)
+    return pl.pallas_call(
+        kernel,
+        grid=(g, nkt),
+        in_specs=[
+            pl.BlockSpec((1, r, m), lambda gi, ki: (gi, 0, 0)),
+            pl.BlockSpec((1, tk, m), lambda gi, ki: (gi, ki, 0)),
+            pl.BlockSpec((1, tk), lambda gi, ki: (gi // hpb, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, r_out, 2), lambda gi, ki: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, r_out, 2), jnp.int32),
+        scratch_shapes=[vmem((r_out, max_score + 1), jnp.int32)],
+        interpret=interpret,
+    )(codes_q, codes_k, kv_valid)

@@ -60,10 +60,16 @@ def main() -> int:
     ap.add_argument("--ragged", action="store_true",
                     help="draw ragged prompt lengths in [L/2, L]")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-impl", default="auto",
+                    choices=("auto", "kernel", "jnp"),
+                    help="sparse-MHA decode path: fused Pallas kernel vs "
+                         "jnp fallback (auto follows spt.attn_impl; "
+                         "REPRO_DISABLE_KERNELS=1 forces jnp)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
+    cfg = cfg.with_spt(decode_attn_impl=args.decode_impl)
     dp, tp = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((dp, tp), ("data", "model"))
     rules = rules_for_mesh(mesh)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import dispatch as kdispatch
 from repro.core import lora, pq
 from repro.core import sparse_attention as sa
 from repro.core.params import ParamDef
@@ -173,12 +174,15 @@ def attend(p: dict, cfg: ModelConfig, q: jax.Array, k: jax.Array,
     aux: dict = {}
     if sparse_applicable(cfg):
         scfg = _sa_config(cfg)
-        if cfg.spt.attn_impl == "pallas":
+        impl = cfg.spt.attn_impl
+        if impl == "pallas" and kdispatch.kernels_disabled():
+            impl = "sparse_jnp"                  # REPRO_DISABLE_KERNELS=1
+        if impl == "pallas":
             from repro.kernels.sparse_attention import ops as sa_ops
             out, aux = sa_ops.sparse_mha(q, k, v, p["pq"]["codebooks"], scfg,
                                          scale, causal=causal, window=window,
                                          q_offset=q_offset)
-        elif cfg.spt.attn_impl == "sparse_masked":
+        elif impl == "sparse_masked":
             out, aux = sa.sparse_mha_masked(q, k, v, p["pq"]["codebooks"],
                                             scfg, scale, causal=causal,
                                             window=window, q_offset=q_offset)
@@ -198,13 +202,19 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                cache: Optional[dict] = None,
                pos: Optional[jax.Array] = None,
                kv_x: Optional[jax.Array] = None,
-               rope: bool = True
+               rope: bool = True,
+               kv_valid: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Optional[dict], dict]:
     """Returns (y, new_cache, aux).  x: (B, S, d_model).
 
     pos: absolute position of x[:, 0] — a scalar when batches are aligned,
     or a (B,) vector when serving slots sit at ragged depths.
     kv_x: source for K/V (cross-attention); defaults to x.
+    kv_valid: decode-mode only — a caller-tracked (B, cache_size) slot
+    validity mask (the serving engine derives it once per step from slot
+    positions); when absent, or for ring-buffer SWA caches whose slot
+    semantics the caller can't see, it is recomputed from the cache's
+    slot_pos.
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -229,12 +239,23 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
     elif mode == "decode":
         assert cache is not None and pos is not None
         new_cache = write_cache(cache, cfg, p, k, v, pos_q)
-        valid = kv_valid_mask(new_cache, start, window)   # (B, S_cache)
+        size = new_cache["k"].shape[2]
+        if (kv_valid is not None and window is None
+                and kv_valid.shape[-1] == size):
+            valid = kv_valid                              # engine-tracked
+        else:
+            valid = kv_valid_mask(new_cache, start, window)   # (B, S_cache)
         scale = hd ** -0.5
         if sparse_applicable(cfg):
-            out = sa.sparse_mha_decode(
-                q, new_cache["k"], new_cache["v"], new_cache["codes"],
-                p["pq"]["codebooks"], _sa_config(cfg), scale, valid)
+            if kdispatch.use_sparse_decode_kernel(cfg):
+                from repro.kernels.sparse_attention import ops as sa_ops
+                out = sa_ops.sparse_mha_decode(
+                    q, new_cache["k"], new_cache["v"], new_cache["codes"],
+                    p["pq"]["codebooks"], _sa_config(cfg), scale, valid)
+            else:
+                out = sa.sparse_mha_decode(
+                    q, new_cache["k"], new_cache["v"], new_cache["codes"],
+                    p["pq"]["codebooks"], _sa_config(cfg), scale, valid)
         else:
             out = sa.dense_attention(q, new_cache["k"], new_cache["v"], scale,
                                      causal=False, kv_valid=valid, chunk_q=1)

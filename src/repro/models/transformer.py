@@ -62,14 +62,14 @@ def block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
 
 
 def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
-                mode: str, cache=None, pos=None
+                mode: str, cache=None, pos=None, kv_valid=None
                 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     h = layers.apply_norm(p["norm_mix"], x, cfg.norm)
     if kind == "attn":
         y, new_cache, a_aux = attention.attn_apply(
             p["mixer"], h, cfg, mode=mode, causal=True, window=cfg.window,
-            cache=cache, pos=pos)
+            cache=cache, pos=pos, kv_valid=kv_valid)
     elif kind == "rec":
         y, new_cache, a_aux = rglru.rec_apply(
             p["mixer"], h, cfg, mode=mode, cache=cache)
@@ -204,7 +204,7 @@ def _embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 
 def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
-                caches=None, pos=None, remat: bool = True
+                caches=None, pos=None, remat: bool = True, kv_valid=None
                 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     aux_total = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
 
@@ -220,7 +220,7 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             name = f"b{i}_{kind}"
             c = None if unit_c is None else unit_c[name]
             h, nc, aux = block_apply(unit_p[name], h, cfg, kind, mode=mode,
-                                     cache=c, pos=pos)
+                                     cache=c, pos=pos, kv_valid=kv_valid)
             new_caches[name] = nc
             for k in AUX_KEYS:
                 aux_u[k] = aux_u[k] + aux[k]
@@ -249,7 +249,8 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             name = f"t{i}_{kind}"
             c = None if caches is None else caches["tail"][name]
             x, nc, aux = block_apply(params["tail"][name], x, cfg, kind,
-                                     mode=mode, cache=c, pos=pos)
+                                     mode=mode, cache=c, pos=pos,
+                                     kv_valid=kv_valid)
             tail_caches[name] = nc
             for k in AUX_KEYS:
                 aux_total[k] = aux_total[k] + aux[k]
@@ -295,14 +296,18 @@ def lm_prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 
 def lm_decode_step(params: dict, cfg: ModelConfig, caches: Any,
-                   token: jax.Array, pos: jax.Array
+                   token: jax.Array, pos: jax.Array,
+                   kv_valid: Optional[jax.Array] = None
                    ) -> Tuple[Any, jax.Array]:
     """One token for every sequence in the batch.  token: (B,);
     pos: () shared position, or (B,) per-slot positions (continuous
-    batching decodes slots sitting at ragged depths)."""
+    batching decodes slots sitting at ragged depths).
+    kv_valid: optional (B, cache_size) slot-validity mask computed ONCE by
+    the caller (the serving engine) and shared by every attention layer —
+    otherwise each layer rederives it from its cache's slot positions."""
     x = _embed_inputs(params, cfg, {"tokens": token[:, None]}, pos0=pos)
     x, caches, _ = _run_blocks(params, cfg, x, mode="decode", caches=caches,
-                               pos=pos, remat=False)
+                               pos=pos, remat=False, kv_valid=kv_valid)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
     return caches, logits_of(params, cfg, x)
 

@@ -227,6 +227,7 @@ class Engine:
         if fn is not None:
             return fn
         cfg, chunk_steps = self.cfg, self.decode_chunk
+        cache_len = self.max_len
 
         def chunk(params, caches, tok, pos, active, n, limit, buf, keys,
                   temp):
@@ -235,8 +236,14 @@ class Engine:
 
             def body(c):
                 t, caches, tok, pos, active, n, buf = c
+                # slot validity from the engine's per-slot positions, built
+                # ONCE per step and shared by every attention layer (slots
+                # fill in position order, so slot j is live iff j <= pos;
+                # ring-buffer SWA layers recompute their own window mask)
+                kv_valid = (jnp.arange(cache_len, dtype=jnp.int32)[None, :]
+                            <= pos[:, None])
                 caches, logits = transformer.lm_decode_step(
-                    params, cfg, caches, tok, pos)
+                    params, cfg, caches, tok, pos, kv_valid=kv_valid)
                 lg = logits[:, -1].astype(jnp.float32)          # (B, V)
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)

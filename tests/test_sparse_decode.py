@@ -1,0 +1,239 @@
+"""Parity suite for the fused Pallas sparse-MHA decode path (interpret=True
+on CPU — the same kernels lower to TPU): decode-threshold kernel and fused
+decode-attention kernel vs the jnp fallback oracle `sa.sparse_mha_decode`,
+across selection granularities, GQA ratios, ring-buffer validity masks, and
+degenerate cases; plus an engine-level check that greedy serving outputs are
+identical with the kernel path on vs off.
+
+These fast cases run in scripts/ci_fast.sh so the kernel path is exercised
+on every iteration; the wide (S, L, dtype) sweep is marked `slow`.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dispatch, pq
+from repro.core import sparse_attention as sa
+from repro.core.params import init_tree
+from repro.kernels.sparse_attention.ops import sparse_mha_decode as k_decode
+from repro.kernels.topl_select.ops import decode_topl_thresholds
+from repro.kernels.topl_select.ref import decode_thresholds_ref
+from repro.serving.engine import Engine, Request
+from repro.train.state import model_defs
+
+
+def _cb(head_dim, code_dim=8, e=16, seed=0):
+    cfg = pq.PQConfig(head_dim=head_dim, code_dim=code_dim, num_codewords=e)
+    return cfg, init_tree(pq.param_defs(cfg),
+                          jax.random.PRNGKey(seed))["codebooks"]
+
+
+def _decode_case(b, hq, hk, s, d, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hk, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hk, s, d)).astype(dtype)
+    return q, k, v
+
+
+def _assert_parity(q, k, v, codes, cb, scfg, kv_valid, tol=2e-3, tile_k=512):
+    d = q.shape[-1]
+    out_k = k_decode(q, k, v, codes, cb, scfg, d ** -0.5, kv_valid,
+                     tile_k=tile_k, interpret=True)
+    out_r = sa.sparse_mha_decode(q, k, v, codes, cb, scfg, d ** -0.5,
+                                 kv_valid)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------ threshold kernel
+@pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
+@pytest.mark.parametrize("hq,hk", [(4, 4), (4, 2), (4, 1)])
+def test_decode_thresholds_kernel_matches_ref(gran, hq, hk):
+    b, s, m = 2, 64, 4
+    r = hq // hk
+    key = jax.random.PRNGKey(1)
+    cq = jax.random.randint(key, (b * hk, r, m), 0, 16)
+    ck = jax.random.randint(jax.random.PRNGKey(2), (b * hk, s, m), 0, 16)
+    kv_valid = jax.random.uniform(jax.random.PRNGKey(3), (b, s)) < 0.7
+    sum_rows = gran == "kvgroup"
+    kw = dict(l=12, max_score=m * (r if sum_rows else 1), sum_rows=sum_rows)
+    got = decode_topl_thresholds(cq, ck, kv_valid, interpret=True,
+                                 tile_k=16, heads_per_batch=hk, **kw)
+    want = decode_thresholds_ref(cq, ck, kv_valid, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------- fused kernel vs oracle
+@pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
+@pytest.mark.parametrize("hq,hk", [(4, 4), (4, 2), (4, 1)])
+def test_decode_kernel_parity(gran, hq, hk):
+    b, s, d = 2, 64, 32
+    pcfg, cb = _cb(d)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=4,
+                                    select_granularity=gran)
+    q, k, v = _decode_case(b, hq, hk, s, d, seed=hq * 10 + hk)
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    kv_valid = jnp.ones((b, s), bool)
+    _assert_parity(q, k, v, codes, cb, scfg, kv_valid)
+
+
+@pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
+def test_decode_kernel_ring_buffer_mask(gran):
+    """Ring-buffer SWA caches reduce to an arbitrary (B, S) validity mask
+    (the window can wrap, so the valid region need not be contiguous)."""
+    b, hq, hk, s, d = 2, 4, 2, 48, 32
+    pcfg, cb = _cb(d)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=4,
+                                    select_granularity=gran)
+    q, k, v = _decode_case(b, hq, hk, s, d, seed=7)
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    wrap = np.zeros((b, s), bool)       # window wrapped around the ring
+    wrap[0, :10] = True
+    wrap[0, 40:] = True
+    wrap[1, 13:29] = True               # window mid-buffer
+    _assert_parity(q, k, v, codes, cb, scfg, jnp.asarray(wrap))
+
+
+@pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
+def test_decode_kernel_degenerate(gran):
+    """S below the L floor (selection saturates to every valid key), a
+    single valid slot, and no valid slots at all (output must be zeros)."""
+    b, hq, hk, d = 1, 4, 2, 32
+    pcfg, cb = _cb(d)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.125, min_l=16,
+                                    select_granularity=gran)
+    s = 8                                # S < min_l => l == S
+    assert sa.top_l(s, scfg, None) == s
+    q, k, v = _decode_case(b, hq, hk, s, d, seed=11)
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    _assert_parity(q, k, v, codes, cb, scfg, jnp.ones((b, s), bool))
+    single = jnp.zeros((b, s), bool).at[:, 3].set(True)
+    _assert_parity(q, k, v, codes, cb, scfg, single)
+    out = k_decode(q, k, v, codes, cb, scfg, d ** -0.5,
+                   jnp.zeros((b, s), bool), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
+def test_decode_kernel_nondivisible_cache_len(gran):
+    """Serving max_len is rarely a tile_k multiple (engine uses
+    prompt+gen+8): the op must pad the key axis to keep Tk tiling (padded
+    slots ride in as kv_valid=0) instead of widening the tile to S."""
+    b, hq, hk, s, d = 2, 4, 2, 52, 32          # 52 = 3*16 + 4
+    pcfg, cb = _cb(d)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=4,
+                                    select_granularity=gran)
+    q, k, v = _decode_case(b, hq, hk, s, d, seed=19)
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    kv_valid = jax.random.uniform(jax.random.PRNGKey(9), (b, s)) < 0.8
+    _assert_parity(q, k, v, codes, cb, scfg, kv_valid, tile_k=16)
+
+
+def test_decode_kernel_tile_invariance():
+    """Cross-tile tie-budget carry: results must not depend on Tk."""
+    b, hq, hk, s, d = 1, 4, 2, 64, 32
+    pcfg, cb = _cb(d)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=4)
+    q, k, v = _decode_case(b, hq, hk, s, d, seed=13)
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    kv_valid = jax.random.uniform(jax.random.PRNGKey(5), (b, s)) < 0.8
+    a = k_decode(q, k, v, codes, cb, scfg, d ** -0.5, kv_valid,
+                 tile_k=16, interpret=True)
+    bb = k_decode(q, k, v, codes, cb, scfg, d ** -0.5, kv_valid,
+                  tile_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_decode_form_matches_fallback():
+    """The fused-form jnp proxy (benchmark stand-in for the kernel) selects
+    the identical set."""
+    b, hq, hk, s, d = 2, 4, 2, 64, 32
+    pcfg, cb = _cb(d)
+    for gran in ("qhead", "kvgroup"):
+        scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=4,
+                                        select_granularity=gran)
+        q, k, v = _decode_case(b, hq, hk, s, d, seed=17)
+        codes = pq.assign(k, cb).astype(jnp.int8)
+        kv_valid = jax.random.uniform(jax.random.PRNGKey(6), (b, s)) < 0.7
+        out_m = sa.sparse_mha_decode_masked(q, k, v, codes, cb, scfg,
+                                            d ** -0.5, kv_valid)
+        out_r = sa.sparse_mha_decode(q, k, v, codes, cb, scfg, d ** -0.5,
+                                     kv_valid)
+        np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_r),
+                                   rtol=2e-3, atol=2e-3, err_msg=gran)
+
+
+# ------------------------------------------------------- dispatch gating
+def test_disable_kernels_env(monkeypatch):
+    cfg = configs.get_smoke("qwen3-0.6b").with_spt(decode_attn_impl="kernel")
+    assert dispatch.use_sparse_decode_kernel(cfg)
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1")
+    assert dispatch.kernels_disabled()
+    assert not dispatch.use_sparse_decode_kernel(cfg)
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
+    assert not dispatch.kernels_disabled()
+    auto = cfg.with_spt(decode_attn_impl="auto")
+    assert not dispatch.use_sparse_decode_kernel(auto)   # attn_impl=jnp
+    assert dispatch.use_sparse_decode_kernel(
+        auto.with_spt(attn_impl="pallas"))
+    assert not dispatch.use_sparse_decode_kernel(
+        cfg.with_spt(decode_attn_impl="jnp"))
+
+
+# ------------------------------------------------------------ engine e2e
+def test_engine_greedy_identical_kernel_on_vs_off():
+    """The compiled lax.while_loop decode chunk traces the fused kernel
+    (per-slot positions + engine-tracked validity); greedy completions must
+    be identical to the jnp decode path."""
+    # fp32 model AND params: the kernel and the jnp gather path accumulate
+    # in different orders (~1e-6 apart in f32); bf16 weights amplify that
+    # to a full bf16 ulp per layer, which can legitimately flip a
+    # near-tied greedy argmax.  All-f32 keeps the paths within float noise
+    # so the token streams must match exactly.
+    base = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256, dtype=jnp.float32).with_spt(ffn_capacity_factor=8.0)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32),
+        init_tree(model_defs(base), jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, 256, size=ln).tolist(),
+                    max_new_tokens=4)
+            for i, ln in enumerate([9, 14])]
+    outs = {}
+    for impl in ("jnp", "kernel"):
+        cfg = base.with_spt(decode_attn_impl=impl)
+        assert dispatch.use_sparse_decode_kernel(cfg) == (impl == "kernel")
+        eng = Engine(cfg, params, max_len=32, num_slots=2, decode_chunk=4)
+        outs[impl] = [c.tokens for c in eng.run(reqs)]
+    assert outs["kernel"] == outs["jnp"]
+
+
+# ------------------------------------------------------------ slow sweep
+@pytest.mark.slow
+@pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
+@pytest.mark.parametrize("s,frac,dtype", [
+    (64, 0.125, jnp.float32),
+    (96, 0.5, jnp.float32),
+    (128, 0.125, jnp.bfloat16),
+    (256, 0.25, jnp.float32),
+])
+def test_decode_kernel_sweep(gran, s, frac, dtype):
+    b, hq, hk, d = 2, 8, 2, 64
+    pcfg, cb = _cb(d)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=frac, min_l=8,
+                                    select_granularity=gran)
+    q, k, v = _decode_case(b, hq, hk, s, d, seed=s, dtype=dtype)
+    codes = pq.assign(k, cb).astype(jnp.int8)
+    kv_valid = jax.random.uniform(jax.random.PRNGKey(s), (b, s)) < 0.9
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    _assert_parity(q, k, v, codes, cb, scfg, kv_valid, tol=tol, tile_k=64)
