@@ -1,0 +1,174 @@
+"""Routed-FFN path benchmark: the grouped-jnp capacity fallback vs the
+dense oracle vs the fused kernel path, decode-shaped and prefill-shaped.
+
+    PYTHONPATH=src python -m benchmarks.routed_ffn \
+        [--pallas] [--out BENCH_ffn.json]
+
+Implementations timed per row (all routing-identical; see
+tests/test_routed_ffn_kernel.py):
+
+  jnp    — core.routed_ffn impl="grouped": the serving fallback (capacity
+           plan + (B, G, C, d) gather + grouped einsums + scatter-add
+           combine), router aux skipped as at inference
+  dense  — impl="dense": the full-FFN masked oracle (no dispatch at all;
+           beta times the useful FLOPs plus (1-beta) wasted)
+  fused  — decode rows: kernels/routed_ffn/ref.decode_ffn_ref, the
+           block-gather form the decode kernel computes (top-G' choices
+           index the weight blocks directly — no plan, no dispatch
+           buffer, no scatter).  On a non-TPU device this is the
+           XLA-executable stand-in for the Pallas kernel's compute graph
+           (same convention as benchmarks/decode_attention.py).
+           Prefill rows: the grouped path as the serving prefill now
+           runs it (router softmax + load-balance aux skipped); the
+           in-kernel gather itself has no XLA stand-in — time it on TPU
+           with --pallas.
+  pallas — kernels/routed_ffn/ops.  Off-TPU it runs interpret=True, a
+           CORRECTNESS mode orders of magnitude off hardware speed, so
+           it is gated behind --pallas and its timing is never a speed
+           claim on CPU.
+
+Emits one JSON line per row and writes the aggregate to --out
+(committed as BENCH_ffn.json at the repo root: the routed-FFN
+trajectory baseline tracked per PR).
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import lora as lora_mod
+from repro.core import routed_ffn as rf
+from repro.core.params import init_tree
+from repro.kernels.routed_ffn import ops as rffn_ops
+from repro.kernels.routed_ffn.ref import decode_ffn_ref
+
+
+def _setup(d, dff, g, gp, gated, lora_on, seed=0):
+    lcfg = lora_mod.LoRAConfig(rank=8, alpha=8.0, enabled=lora_on)
+    rcfg = rf.RoutedFFNConfig(d_model=d, d_ff=dff, num_groups=g,
+                              active_groups=gp, capacity_factor=2.0,
+                              gated=gated, activation="silu")
+    p = init_tree(rf.param_defs(rcfg, lcfg), jax.random.PRNGKey(seed))
+    return rcfg, lcfg, p
+
+
+def bench_decode_row(b, d, dff, g, gp, *, gated=True, lora_on=True,
+                     run_pallas=False) -> dict:
+    rcfg, lcfg, p = _setup(d, dff, g, gp, gated, lora_on)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, d))
+    lora_params = ({k: p[k] for k in ("lora_inner", "lora_gate",
+                                     "lora_outer") if k in p}
+                   if lora_on else None)
+
+    f_jnp = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                            impl="grouped",
+                                            need_aux=False)[0])
+    f_dense = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                              impl="dense",
+                                              need_aux=False)[0])
+
+    def fused(x):
+        choice, gate_w, _ = rf.route(x, p["router"], rcfg, need_aux=False)
+        return decode_ffn_ref(x[:, 0], choice[:, 0], gate_w[:, 0],
+                              p["w_inner"], p["w_outer"], p.get("w_gate"),
+                              lora_params, lcfg.scale, act=rcfg.activation)
+
+    f_fused = jax.jit(fused)
+    row = {
+        "shape": "decode", "b": b, "s": 1, "d": d, "d_ff": dff,
+        "groups": g, "active": gp, "gated": gated, "lora": lora_on,
+        "jnp_us": round(time_fn(f_jnp, x), 1),
+        "dense_us": round(time_fn(f_dense, x), 1),
+        "fused_us": round(time_fn(f_fused, x), 1),
+    }
+    row["fused_speedup"] = round(row["jnp_us"] / row["fused_us"], 2)
+    if run_pallas:
+        interp = jax.devices()[0].platform != "tpu"
+        f_pl = lambda x: rffn_ops.routed_ffn_decode(
+            x, p, rcfg, lcfg, interpret=interp)[0]
+        row["pallas_us"] = round(time_fn(f_pl, x, iters=3, warmup=1), 1)
+        row["pallas_interpret"] = interp
+    return row
+
+
+def bench_prefill_row(b, s, d, dff, g, gp, *, gated=True, lora_on=True,
+                      run_pallas=False) -> dict:
+    rcfg, lcfg, p = _setup(d, dff, g, gp, gated, lora_on)
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s, d))
+
+    # jnp = the pre-PR prefill path (always paid router softmax + lb aux);
+    # fused stand-in = the serving prefill as this PR runs it (aux
+    # skipped).  The in-kernel gather is kernel-only: --pallas times it.
+    f_jnp = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                            impl="grouped")[0])
+    f_dense = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                              impl="dense",
+                                              need_aux=False)[0])
+    f_fused = jax.jit(lambda x: rf.routed_ffn(x, p, rcfg, lcfg,
+                                              impl="grouped",
+                                              need_aux=False)[0])
+    row = {
+        "shape": "prefill", "b": b, "s": s, "d": d, "d_ff": dff,
+        "groups": g, "active": gp, "gated": gated, "lora": lora_on,
+        "jnp_us": round(time_fn(f_jnp, x), 1),
+        "dense_us": round(time_fn(f_dense, x), 1),
+        "fused_us": round(time_fn(f_fused, x), 1),
+    }
+    row["fused_speedup"] = round(row["jnp_us"] / row["fused_us"], 2)
+    if run_pallas:
+        interp = jax.devices()[0].platform != "tpu"
+        f_pl = lambda x: rffn_ops.routed_ffn(x, p, rcfg, lcfg,
+                                             interpret=interp,
+                                             need_aux=False)[0]
+        row["pallas_us"] = round(time_fn(f_pl, x, iters=3, warmup=1), 1)
+        row["pallas_interpret"] = interp
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ffn.json")
+    ap.add_argument("--pallas", action="store_true",
+                    help="also time the Pallas kernels (interpret mode "
+                         "off-TPU: correctness only, not a speed signal)")
+    args = ap.parse_args()
+
+    platform = jax.devices()[0].platform
+    note = ("fused == the kernel-equivalent XLA execution (decode rows: "
+            "block-gather decode_ffn_ref, no capacity plan / dispatch "
+            "buffer; prefill rows: grouped with inference aux skip).  "
+            "jnp == the grouped capacity fallback serving default.  On "
+            "TPU, time the kernels themselves with --pallas.")
+    rows = []
+    decode_shapes = [
+        (8, 64, 256, 8, 2),
+        (8, 64, 256, 8, 4),
+        (32, 64, 256, 8, 2),
+        (32, 128, 512, 8, 2),
+        (64, 64, 256, 16, 4),
+        (16, 128, 512, 16, 4),
+    ]
+    for i, (b, d, dff, g, gp) in enumerate(decode_shapes):
+        row = bench_decode_row(b, d, dff, g, gp,
+                               run_pallas=args.pallas and i == 0)
+        rows.append(row)
+        print(json.dumps(row))
+    for i, (b, s, d, dff, g, gp) in enumerate([
+            (2, 128, 64, 256, 8, 4),
+            (4, 256, 64, 256, 8, 2)]):
+        row = bench_prefill_row(b, s, d, dff, g, gp,
+                                run_pallas=args.pallas and i == 0)
+        rows.append(row)
+        print(json.dumps(row))
+    wins = sum(r["fused_us"] < r["jnp_us"] for r in rows)
+    out = {"bench": "routed_ffn", "device": platform, "note": note,
+           "fused_wins": f"{wins}/{len(rows)}", "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} (fused beats jnp on {wins}/{len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,15 +27,21 @@ from benchmarks.common import scale_note
 
 def _variant_cfg(cfg, variant: str):
     """Serving variants tracked per PR: the dense baseline, the sparse-MHA
-    jnp decode fallback, and the fused Pallas decode kernel path
-    (interpret-mode off-TPU — compare kernel rows across PRs, not against
-    the jnp rows, on CPU)."""
+    jnp decode fallback, the fused Pallas decode kernel path, and the
+    routed-FFN decode paths (ffn = grouped capacity dispatch at (B,1,d),
+    ffn-kernel = block-gather Pallas kernel, no dispatch buffer).  Kernel
+    variants run interpret-mode off-TPU — compare kernel rows across PRs,
+    not against the jnp rows, on CPU."""
     if variant == "dense":
         return cfg.with_spt(sparse_mha=False)
     if variant == "sparse":
         return cfg.with_spt(sparse_mha=True, decode_attn_impl="jnp")
     if variant == "sparse-kernel":
         return cfg.with_spt(sparse_mha=True, decode_attn_impl="kernel")
+    if variant == "ffn":
+        return cfg.with_spt(sparse_mha=False, decode_ffn_impl="jnp")
+    if variant == "ffn-kernel":
+        return cfg.with_spt(sparse_mha=False, decode_ffn_impl="kernel")
     raise ValueError(variant)
 
 
@@ -77,9 +83,9 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--decode-chunk", type=int, default=16)
     ap.add_argument("--variants", default="dense,sparse",
-                    help="comma list of dense|sparse|sparse-kernel "
-                         "(sparse-kernel = fused Pallas decode; interpret "
-                         "mode off-TPU, so opt-in)")
+                    help="comma list of dense|sparse|sparse-kernel|ffn|"
+                         "ffn-kernel (*-kernel = fused Pallas paths; "
+                         "interpret mode off-TPU, so opt-in)")
     args = ap.parse_args()
 
     print(json.dumps({"note": scale_note()}))

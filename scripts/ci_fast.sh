@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Fast CI smoke subset: skips tests marked `slow` (multi-arch smokes,
 # end-to-end training, and the wide kernel interpret sweeps) so builders
-# can iterate in ~1-2 min.  The Pallas decode-kernel path IS exercised
+# can iterate in a few minutes.  The Pallas kernel paths ARE exercised
 # here: tests/test_sparse_decode.py's parity cases run the fused decode
 # kernels under interpret=True on CPU (only the (S, L, dtype) sweep is
-# `slow`).  The tier-1 command stays the full suite:
+# `slow`), and tests/test_routed_ffn_kernel.py runs the fused routed-FFN
+# grouped/decode kernels the same way (incl. the engine-level greedy
+# kernel-on == kernel-off check).  The tier-1 command stays the full
+# suite:
 #   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."

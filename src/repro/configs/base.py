@@ -39,7 +39,16 @@ class SPTConfig:
     ffn_active_groups: int = 4
     ffn_capacity_factor: float = 1.25
     dispatch_pad: int = 8           # 128 => capacity dim shardable (perf)
-    ffn_impl: str = "grouped"       # grouped | dense
+    # "pallas" = fused grouped-GEMM kernel with in-kernel (scalar-prefetch)
+    # token dispatch; "grouped" = jnp BSpMV fallback; "dense" = masked
+    # oracle.  REPRO_DISABLE_KERNELS=1 demotes "pallas" to "grouped".
+    ffn_impl: str = "grouped"       # grouped | dense | grouped_shmap | pallas
+    # serving-decode routed-FFN path at (B, 1, d): "kernel" = block-gather
+    # Pallas kernel (scalar-prefetched top-G' choices index the weight
+    # blocks directly — no capacity plan, no dispatch buffer, no scatter),
+    # "jnp" = the grouped capacity path, "auto" = follow ffn_impl
+    # ("pallas" -> kernel).  REPRO_DISABLE_KERNELS=1 forces jnp.
+    decode_ffn_impl: str = "auto"   # auto | kernel | jnp
     routed_ffn_in_experts: bool = False  # sub-route inside MoE experts
     lb_loss_weight: float = 0.01
     qerr_loss_weight: float = 0.0

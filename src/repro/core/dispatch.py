@@ -142,6 +142,36 @@ def use_sparse_decode_kernel(cfg) -> bool:
     return impl == "kernel"
 
 
+def use_routed_ffn_kernel(cfg) -> bool:
+    """Should train/prefill routed FFN lower through the fused Pallas
+    grouped-GEMM kernel (in-kernel scalar-prefetch dispatch)?
+
+    cfg is a ModelConfig (duck-typed).  spt.ffn_impl == "pallas" selects
+    the kernel; REPRO_DISABLE_KERNELS=1 demotes it to the jnp grouped
+    path (identical routing plan, so identical function).
+    """
+    if kernels_disabled():
+        return False
+    return getattr(cfg.spt, "ffn_impl", "grouped") == "pallas"
+
+
+def use_decode_ffn_kernel(cfg) -> bool:
+    """Should the serving-decode routed FFN (x of shape (B, 1, d)) lower
+    through the block-gather Pallas kernel (no capacity plan, no dispatch
+    buffer)?
+
+    spt.decode_ffn_impl: "kernel" | "jnp" | "auto" (auto follows the
+    train/prefill ffn_impl, i.e. kernel on iff ffn_impl == "pallas").
+    REPRO_DISABLE_KERNELS=1 overrides everything.
+    """
+    if kernels_disabled():
+        return False
+    impl = getattr(cfg.spt, "decode_ffn_impl", "auto")
+    if impl == "auto":
+        return getattr(cfg.spt, "ffn_impl", "grouped") == "pallas"
+    return impl == "kernel"
+
+
 def load_balance_loss(router_probs: jax.Array, choice: jax.Array,
                       num_groups: int) -> jax.Array:
     """Switch-style auxiliary loss (paper §4.2 'load-balancing loss'):

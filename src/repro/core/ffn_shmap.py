@@ -55,9 +55,13 @@ def applicable(mesh, cfg: RoutedFFNConfig, d_ff: int, seq: int,
 
 
 def routed_ffn_shmap(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
-                     lora_cfg: lora.LoRAConfig, mesh
+                     lora_cfg: lora.LoRAConfig, mesh,
+                     need_aux: bool = True
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """x: (B, S, d) logically; enters/leaves seq-sharded on "model"."""
+    """x: (B, S, d) logically; enters/leaves seq-sharded on "model".
+
+    ``need_aux=False`` (inference) skips the router softmax, the
+    load-balance loss and its cross-data pmean."""
     b_ax, model = _specs(mesh)
     r = lora_cfg.rank if lora_cfg.enabled else 0
     use_lora = lora_cfg.enabled and "lora_inner" in p
@@ -67,7 +71,7 @@ def routed_ffn_shmap(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
         # x_l: (b_loc, s/tp, d) -> gather full sequence locally
         xf = jax.lax.all_gather(x_l, "model", axis=1, tiled=True)
         bl, s, d = xf.shape
-        choice, gate_w, probs = route(xf, router_w, cfg)
+        choice, gate_w, probs = route(xf, router_w, cfg, need_aux=need_aux)
         cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
                                 cfg.capacity_factor, pad=cfg.capacity_pad)
         plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
@@ -97,10 +101,13 @@ def routed_ffn_shmap(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
         # partial over the TP contraction -> reduce-scatter along seq
         y_out = jax.lax.psum_scatter(y_full, "model", scatter_dimension=1,
                                      tiled=True)
-        lb_loss = jax.lax.pmean(
-            dispatch.load_balance_loss(probs, choice, cfg.num_groups),
-            axis_name=tuple(a for a in ("pod", "data")
-                            if a in mesh.axis_names) or "model")
+        if need_aux:
+            lb_loss = jax.lax.pmean(
+                dispatch.load_balance_loss(probs, choice, cfg.num_groups),
+                axis_name=tuple(a for a in ("pod", "data")
+                                if a in mesh.axis_names) or "model")
+        else:
+            lb_loss = jnp.zeros((), jnp.float32)
         dropped = jax.lax.pmean(plan.dropped, axis_name="model")
         return y_out, lb_loss, dropped
 

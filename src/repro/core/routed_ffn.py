@@ -107,15 +107,20 @@ def param_defs(cfg: RoutedFFNConfig, lora_cfg: lora.LoRAConfig) -> dict:
     return defs
 
 
-def route(x: jax.Array, router_w: jax.Array,
-          cfg: RoutedFFNConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def route(x: jax.Array, router_w: jax.Array, cfg: RoutedFFNConfig,
+          need_aux: bool = True
+          ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
     """Router forward: top-G' groups by |logit| (paper: largest magnitude).
 
     x: (B, S, d) -> (choice (B,S,G'), gate (B,S,G'), probs (B,S,G))
+
+    ``need_aux=False`` (inference) skips the softmax over the full group
+    axis — it exists only to feed the load-balance loss, which decode
+    would otherwise pay per token per layer — and returns probs=None.
     """
     logits = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
                         router_w.astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1) if need_aux else None
     _, choice = jax.lax.top_k(jnp.abs(logits), cfg.active_groups)
     if cfg.gate_outputs:
         gate = jax.nn.sigmoid(jnp.take_along_axis(logits, choice, axis=-1))
@@ -201,15 +206,19 @@ def _grouped_forward(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
 
 
 def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
-               lora_cfg: lora.LoRAConfig,
-               impl: str = "grouped") -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Apply the routed FFN. x: (B, S, d) (2D inputs get a batch dim)."""
+               lora_cfg: lora.LoRAConfig, impl: str = "grouped",
+               need_aux: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Apply the routed FFN. x: (B, S, d) (2D inputs get a batch dim).
+
+    ``need_aux=False`` (inference) skips the router softmax and the
+    load-balance loss; aux["lb_loss"] is then zero."""
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]
-    choice, gate_w, probs = route(x, p["router"], cfg)
+    choice, gate_w, probs = route(x, p["router"], cfg, need_aux=need_aux)
     aux = {
-        "lb_loss": dispatch.load_balance_loss(probs, choice, cfg.num_groups),
+        "lb_loss": (dispatch.load_balance_loss(probs, choice, cfg.num_groups)
+                    if need_aux else jnp.zeros((), jnp.float32)),
         "dropped": jnp.zeros((), jnp.float32),
     }
     if impl == "dense":

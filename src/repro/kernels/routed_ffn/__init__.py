@@ -1,1 +1,2 @@
-from repro.kernels.routed_ffn.ops import routed_ffn  # noqa: F401
+from repro.kernels.routed_ffn.ops import (routed_ffn,  # noqa: F401
+                                          routed_ffn_decode)

@@ -1,13 +1,27 @@
-"""Public routed-FFN op: route+dispatch in jnp (sharding-aware), fused
-grouped GEMMs (incl. LoRA) in the Pallas kernel, combine in jnp.
+"""Public routed-FFN ops.
 
-Drop-in for core.routed_ffn.routed_ffn; backward differentiates the
-reference grouped path (identical routing plan => identical function).
+``routed_ffn`` (train / prefill): route + capacity plan in jnp
+(sharding-aware), then the fused Pallas kernel runs the grouped GEMMs
+(incl. LoRA) with the token gather fused in-kernel — the plan's index
+array rides as a scalar-prefetch operand and token tiles are DMA'd from
+the raw (B, S, d) activations, so the (B, G, C, d) dispatch buffer the
+jnp path materializes never reaches HBM.  The combine scatter-add stays
+in jnp: it is the differentiable half of dispatch, and the backward pass
+differentiates the reference grouped path anyway (identical routing plan
+=> identical function).
+
+``routed_ffn_decode`` (serving decode, x of shape (B, 1, d)): skips the
+plan entirely — the top-G' choices index the weight blocks directly in
+the block-gather kernel.  Inference-only, no VJP (the grouped path stays
+the oracle; tests/test_routed_ffn_kernel.py asserts parity).
+
+``interpret=None`` derives the mode from the backend (compiled on TPU,
+interpreter elsewhere), so serving needs no plumbing.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,62 +29,98 @@ import jax.numpy as jnp
 from repro.core import dispatch, lora
 from repro.core.routed_ffn import RoutedFFNConfig, route
 from repro.core.routed_ffn import routed_ffn as routed_ffn_core
-from repro.kernels.routed_ffn.routed_ffn import grouped_ffn_kernel
+from repro.kernels.routed_ffn.routed_ffn import (decode_ffn_kernel,
+                                                 grouped_ffn_kernel)
 
 
-def _forward(x, p, cfg: RoutedFFNConfig, lora_cfg, interpret):
-    b, s, d = x.shape
-    choice, gate_w, probs = route(x, p["router"], cfg)
-    cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
-                            cfg.capacity_factor)
-    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
-    xg = dispatch.gather(x, plan)                       # (B, G, C, d)
-    lora_params = None
+def _lora_tree(p: dict, lora_cfg) -> Optional[dict]:
     if lora_cfg.enabled and "lora_inner" in p:
-        lora_params = {k: p[k] for k in
-                       ("lora_inner", "lora_gate", "lora_outer") if k in p}
+        return {k: p[k] for k in
+                ("lora_inner", "lora_gate", "lora_outer") if k in p}
+    return None
+
+
+def _forward(x, p, cfg: RoutedFFNConfig, lora_cfg, interpret, need_aux):
+    b, s, d = x.shape
+    choice, gate_w, probs = route(x, p["router"], cfg, need_aux=need_aux)
+    cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
+                            cfg.capacity_factor, pad=cfg.capacity_pad)
+    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
     y = grouped_ffn_kernel(
-        xg, jax.lax.stop_gradient(p["w_inner"]),
+        x, plan.index, jax.lax.stop_gradient(p["w_inner"]),
         jax.lax.stop_gradient(p["w_outer"]),
         jax.lax.stop_gradient(p["w_gate"]) if cfg.gated else None,
-        lora_params, lora_cfg.scale, act=cfg.activation, interpret=interpret)
+        _lora_tree(p, lora_cfg), lora_cfg.scale, act=cfg.activation,
+        interpret=interpret)
     out = dispatch.combine(y.astype(x.dtype), plan, s)
     aux = {
-        "lb_loss": dispatch.load_balance_loss(probs, choice, cfg.num_groups),
+        "lb_loss": (dispatch.load_balance_loss(probs, choice, cfg.num_groups)
+                    if need_aux else jnp.zeros((), jnp.float32)),
         "dropped": plan.dropped,
     }
     return out, aux
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _op(x, p, cfg, lora_cfg, interpret):
-    return _forward(x, p, cfg, lora_cfg, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _op(x, p, cfg, lora_cfg, interpret, need_aux):
+    return _forward(x, p, cfg, lora_cfg, interpret, need_aux)
 
 
-def _fwd(x, p, cfg, lora_cfg, interpret):
-    out = _forward(x, p, cfg, lora_cfg, interpret)
+def _fwd(x, p, cfg, lora_cfg, interpret, need_aux):
+    out = _forward(x, p, cfg, lora_cfg, interpret, need_aux)
     return out, (x, p)
 
 
-def _bwd(cfg, lora_cfg, interpret, res, cts):
+def _bwd(cfg, lora_cfg, interpret, need_aux, res, cts):
     x, p = res
-    g, aux_ct = cts
 
     def ref(x_, p_):
-        return routed_ffn_core(x_, p_, cfg, lora_cfg, impl="grouped")
+        return routed_ffn_core(x_, p_, cfg, lora_cfg, impl="grouped",
+                               need_aux=need_aux)
 
     _, vjp = jax.vjp(ref, x, p)
-    return vjp((g, aux_ct))
+    return vjp(cts)
 
 
 _op.defvjp(_fwd, _bwd)
 
 
 def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
-               lora_cfg: lora.LoRAConfig, interpret: bool = True
+               lora_cfg: lora.LoRAConfig,
+               interpret: Optional[bool] = None, *, need_aux: bool = True
                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Drop-in for core.routed_ffn.routed_ffn (impl="grouped" semantics)."""
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]
-    out, aux = _op(x, p, cfg, lora_cfg, interpret)
+    out, aux = _op(x, p, cfg, lora_cfg, interpret, need_aux)
     return (out[0] if squeeze else out), aux
+
+
+def routed_ffn_decode(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
+                      lora_cfg: lora.LoRAConfig,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Decode-shaped routed FFN: x (B, 1, d) (or (B, d)) -> same shape.
+
+    One token per sequence makes capacity bucketing pure overhead (G*C
+    slots of plan, gather and scatter to use G'), so the router's top-G'
+    choices are scalar-prefetched into the block-gather kernel and index
+    the weight blocks directly.  No dispatch buffer is built at any
+    width.  Inference-only — no VJP; aux is zeros (no load-balance term
+    at serving time).
+    """
+    squeeze = x.ndim == 2
+    x3 = x[:, None] if squeeze else x
+    choice, gate_w, _ = route(x3, p["router"], cfg, need_aux=False)
+    y = decode_ffn_kernel(
+        x3[:, 0], choice[:, 0], gate_w[:, 0],
+        jax.lax.stop_gradient(p["w_inner"]),
+        jax.lax.stop_gradient(p["w_outer"]),
+        jax.lax.stop_gradient(p["w_gate"]) if cfg.gated else None,
+        _lora_tree(p, lora_cfg), lora_cfg.scale, act=cfg.activation,
+        interpret=interpret)
+    y = y.astype(x.dtype)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "dropped": jnp.zeros((), jnp.float32)}
+    return (y if squeeze else y[:, None]), aux

@@ -1,4 +1,4 @@
-"""Oracle for the grouped-GEMM routed FFN kernel."""
+"""Oracles for the routed-FFN kernels (pure-jnp einsum forms)."""
 from typing import Optional
 
 import jax
@@ -22,3 +22,43 @@ def grouped_ffn_ref(xg: jax.Array, w_inner: jax.Array, w_outer: jax.Array,
         h = fn(up)
     y = jnp.einsum("bgcf,gfd->bgcd", h, w_outer.astype(jnp.float32))
     return y.astype(xg.dtype)
+
+
+def decode_ffn_ref(x: jax.Array, choice: jax.Array, gate: jax.Array,
+                   w_inner: jax.Array, w_outer: jax.Array,
+                   w_gate: Optional[jax.Array] = None,
+                   lora_params: Optional[dict] = None,
+                   lora_scale: float = 1.0, act: str = "relu") -> jax.Array:
+    """Oracle for ``decode_ffn_kernel`` — and the XLA-executable stand-in
+    for it in benchmarks (table5 convention): gather the top-G' weight
+    blocks per token and contract directly, with no capacity plan, no
+    (B, G, C, d) dispatch buffer and no scatter-add.
+
+    x: (B, d); choice: (B, G') int32; gate: (B, G') f32 -> y: (B, d).
+    """
+    fn = ACTIVATIONS[act]
+    f32 = jnp.float32
+    xf = x.astype(f32)
+
+    def proj_up(w, lora_key):
+        up = jnp.einsum("bd,bgdf->bgf", xf, w[choice].astype(f32))
+        if lora_params is not None and lora_key in lora_params:
+            li = lora_params[lora_key]
+            xb = jnp.einsum("bd,dr->br", xf, li["b"].astype(f32))
+            up = up + lora_scale * jnp.einsum(
+                "br,bgrf->bgf", xb, li["c"][choice].astype(f32))
+        return up
+
+    up = proj_up(w_inner, "lora_inner")
+    if w_gate is not None:
+        h = fn(proj_up(w_gate, "lora_gate")) * up
+    else:
+        h = fn(up)
+    y = jnp.einsum("bgf,bgfd->bgd", h, w_outer[choice].astype(f32))
+    if lora_params is not None and "lora_outer" in lora_params:
+        lo = lora_params["lora_outer"]
+        hb = jnp.einsum("bgf,bgfr->bgr", h, lo["b"][choice].astype(f32))
+        y = y + lora_scale * jnp.einsum("bgr,rd->bgd", hb,
+                                        lo["c"].astype(f32))
+    y = jnp.einsum("bg,bgd->bd", gate.astype(f32), y)
+    return y.astype(x.dtype)

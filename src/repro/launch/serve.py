@@ -65,11 +65,25 @@ def main() -> int:
                     help="sparse-MHA decode path: fused Pallas kernel vs "
                          "jnp fallback (auto follows spt.attn_impl; "
                          "REPRO_DISABLE_KERNELS=1 forces jnp)")
+    ap.add_argument("--ffn-impl", default=None,
+                    choices=("pallas", "grouped", "dense"),
+                    help="routed-FFN train/prefill path: 'pallas' = fused "
+                         "grouped-GEMM kernel with in-kernel dispatch; "
+                         "default keeps the arch config's setting")
+    ap.add_argument("--decode-ffn-impl", default="auto",
+                    choices=("auto", "kernel", "jnp"),
+                    help="routed-FFN decode path at (B, 1, d): block-gather "
+                         "Pallas kernel (no dispatch buffer) vs the grouped "
+                         "jnp capacity path (auto follows --ffn-impl; "
+                         "REPRO_DISABLE_KERNELS=1 forces jnp)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
-    cfg = cfg.with_spt(decode_attn_impl=args.decode_impl)
+    cfg = cfg.with_spt(decode_attn_impl=args.decode_impl,
+                       decode_ffn_impl=args.decode_ffn_impl)
+    if args.ffn_impl is not None:
+        cfg = cfg.with_spt(ffn_impl=args.ffn_impl)
     dp, tp = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((dp, tp), ("data", "model"))
     rules = rules_for_mesh(mesh)

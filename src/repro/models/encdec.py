@@ -74,7 +74,7 @@ def encode(params: dict, cfg: ModelConfig, audio_embeds: jax.Array,
                                        causal=False, rope=False)
         h = h + y
         hh = layers.apply_norm(p["norm_ffn"], h, cfg.norm)
-        y, _ = ffn.ffn_apply(p["ffn"], hh, cfg)
+        y, _ = ffn.ffn_apply(p["ffn"], hh, cfg, mode="train")
         return h + y, None
 
     fn = jax.checkpoint(body, prevent_cse=False) if remat else body
@@ -103,7 +103,7 @@ def _dec_block(p: dict, x: jax.Array, cfg: ModelConfig, enc_out, *,
                    if mode == "prefill" else None)
     x = x + y
     h = layers.apply_norm(p["norm_ffn"], x, cfg.norm)
-    y, aux = ffn.ffn_apply(p["ffn"], h, cfg)
+    y, aux = ffn.ffn_apply(p["ffn"], h, cfg, mode=mode)
     x = x + y
     if new_cache is not None:
         new_cache = {"self": self_c, "cross": cross_c}

@@ -1,4 +1,18 @@
-"""FFN layer: dense (Full/LoRA baseline) or the paper's routed FFN."""
+"""FFN layer: dense (Full/LoRA baseline) or the paper's routed FFN.
+
+Routed-FFN execution paths (selection in core/dispatch.py):
+
+  * ``spt.ffn_impl="pallas"`` — fused Pallas grouped-GEMM kernel with
+    in-kernel scalar-prefetch dispatch (kernels/routed_ffn); falls back
+    to "grouped" under REPRO_DISABLE_KERNELS=1.
+  * ``mode="decode"`` at (B, 1, d) — block-gather decode kernel (no
+    capacity plan, no dispatch buffer) when
+    ``dispatch.use_decode_ffn_kernel(cfg)`` says so.
+  * ``"grouped"`` / ``"dense"`` / ``"grouped_shmap"`` — the jnp paths.
+
+``mode`` ("train" | "prefill" | "decode") also gates the router aux:
+inference skips the full-group softmax and load-balance loss.
+"""
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
@@ -7,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import lora, routed_ffn
+from repro.core import dispatch, lora, routed_ffn
 from repro.core.params import ParamDef
 from repro.models.layers import norm_defs
 from repro.sharding import shard
@@ -43,23 +57,45 @@ def ffn_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
-def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig
+def _routed_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str
+                  ) -> Tuple[jax.Array, dict]:
+    lc = cfg.spt.lora
+    rcfg = _routed_cfg(cfg)
+    need_aux = mode == "train"
+    if mode == "decode" and x.ndim == 3 and x.shape[1] == 1:
+        if dispatch.use_decode_ffn_kernel(cfg):
+            from repro.kernels.routed_ffn import ops as rffn_ops
+            return rffn_ops.routed_ffn_decode(x, p, rcfg, lc)
+        if cfg.spt.decode_ffn_impl == "jnp":
+            # explicit per-path override: grouped jnp at decode even when
+            # ffn_impl="pallas" keeps the train/prefill kernel on
+            return routed_ffn.routed_ffn(x, p, rcfg, lc, impl="grouped",
+                                         need_aux=False)
+    impl = cfg.spt.ffn_impl
+    if impl == "pallas":
+        if dispatch.use_routed_ffn_kernel(cfg):
+            from repro.kernels.routed_ffn import ops as rffn_ops
+            return rffn_ops.routed_ffn(x, p, rcfg, lc, need_aux=need_aux)
+        impl = "grouped"                       # REPRO_DISABLE_KERNELS=1
+    if impl == "grouped_shmap":
+        from repro.core import ffn_shmap
+        from repro.sharding import current_rules
+        rules = current_rules() or {}
+        mesh = rules.get("__mesh__")
+        if x.ndim == 3 and ffn_shmap.applicable(
+                mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0]):
+            return ffn_shmap.routed_ffn_shmap(x, p, rcfg, lc, mesh,
+                                              need_aux=need_aux)
+        impl = "grouped"
+    return routed_ffn.routed_ffn(x, p, rcfg, lc, impl=impl,
+                                 need_aux=need_aux)
+
+
+def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
               ) -> Tuple[jax.Array, dict]:
     lc = cfg.spt.lora
     if routed_applicable(cfg):
-        rcfg = _routed_cfg(cfg)
-        if cfg.spt.ffn_impl == "grouped_shmap":
-            from repro.core import ffn_shmap
-            from repro.sharding import current_rules
-            rules = current_rules() or {}
-            mesh = rules.get("__mesh__")
-            if x.ndim == 3 and ffn_shmap.applicable(
-                    mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0]):
-                return ffn_shmap.routed_ffn_shmap(x, p, rcfg, lc, mesh)
-            y, aux = routed_ffn.routed_ffn(x, p, rcfg, lc, impl="grouped")
-            return y, aux
-        y, aux = routed_ffn.routed_ffn(x, p, rcfg, lc, impl=cfg.spt.ffn_impl)
-        return y, aux
+        return _routed_apply(p, x, cfg, mode)
     act = routed_ffn.ACTIVATIONS[cfg.activation]
     up = lora.linear(x, p["wi"], lc)
     up = shard(up, "batch", None, "ffn")

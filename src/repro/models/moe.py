@@ -62,9 +62,12 @@ def moe_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
-def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
               ) -> Tuple[jax.Array, dict]:
-    """x: (B, S, d) -> (y, aux)."""
+    """x: (B, S, d) -> (y, aux).  The router softmax stays (it feeds the
+    top-k gates) but inference modes skip the load-balance loss.
+    Follow-on (ROADMAP): reuse the routed-FFN kernel switch here — the
+    dispatch mechanism is identical at expert granularity."""
     lc = cfg.spt.lora
     squeeze = x.ndim == 2
     if squeeze:
@@ -107,7 +110,8 @@ def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig
             "becr,rd->becd", hb, p["lora_wo"]["c"].astype(x.dtype))
     out = dispatch.combine(y, plan, s).astype(x.dtype)
     aux = {
-        "lb_loss": dispatch.load_balance_loss(probs, choice, e),
+        "lb_loss": (dispatch.load_balance_loss(probs, choice, e)
+                    if mode == "train" else jnp.zeros((), jnp.float32)),
         "dropped": plan.dropped,
     }
     return (out[0] if squeeze else out), aux

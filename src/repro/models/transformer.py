@@ -84,10 +84,12 @@ def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
     x = x + y.astype(x.dtype)
     if "ffn" in p:
         h2 = layers.apply_norm(p["norm_ffn"], x, cfg.norm)
+        # mode gates the FFN execution path (decode-shaped kernel at
+        # (B, 1, d)) and the router aux (inference skips lb_loss)
         if cfg.num_experts > 0:
-            y2, f_aux = moe.moe_apply(p["ffn"], h2, cfg)
+            y2, f_aux = moe.moe_apply(p["ffn"], h2, cfg, mode=mode)
         else:
-            y2, f_aux = ffn.ffn_apply(p["ffn"], h2, cfg)
+            y2, f_aux = ffn.ffn_apply(p["ffn"], h2, cfg, mode=mode)
         x = x + y2.astype(x.dtype)
         for k in AUX_KEYS:
             if k in f_aux:

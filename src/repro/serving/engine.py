@@ -16,6 +16,12 @@ slots (vLLM-style, in JAX):
   * decode runs in jit-compiled `lax.while_loop` chunks with per-slot
     positions, so the whole generation traces ONCE instead of per token;
     the loop exits a chunk early when every slot has finished;
+  * each decode step lowers through the fused Pallas kernel paths when
+    the config selects them (`core/dispatch.py`): sparse-MHA decode
+    attention, and the routed-FFN block-gather kernel — at (B, 1, d)
+    the latter indexes weight blocks by the scalar-prefetched top-G'
+    choices directly, so no (B, G, C, d) dispatch buffer is built and
+    the router's softmax/load-balance aux is skipped (inference mode);
   * slots retire on EOS or on their per-request token budget, freeing the
     slot for the next queued request.
 

@@ -1,0 +1,248 @@
+"""Routed-FFN Pallas kernel-path parity (interpret=True on CPU).
+
+Covers the fused grouped kernel (in-kernel scalar-prefetch dispatch) and
+the decode block-gather kernel against the jnp grouped oracle:
+gated/ungated x LoRA on/off x capacity drops x non-tile-multiple C and F
+x decode shape (B, 1, d), plus the dispatch gating switches and an
+engine-level greedy kernel-on == kernel-off check.  Fast cases run in
+scripts/ci_fast.sh; only the widest sweep is `slow`."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dispatch
+from repro.core import lora as lora_mod
+from repro.core import routed_ffn as rf
+from repro.core.params import init_tree
+from repro.kernels.routed_ffn import ops as rffn_ops
+from repro.kernels.routed_ffn.ref import decode_ffn_ref
+from repro.kernels.routed_ffn.routed_ffn import (decode_ffn_kernel,
+                                                 grouped_ffn_kernel)
+from repro.models import ffn
+from repro.serving.engine import Engine, Request
+from repro.train.state import model_defs
+
+
+def _setup(d, dff, g, gp, gated, lora_on, capf=4.0, act="gelu",
+           gate_out=False, seed=0):
+    lcfg = lora_mod.LoRAConfig(rank=4, alpha=4.0, enabled=lora_on)
+    rcfg = rf.RoutedFFNConfig(d_model=d, d_ff=dff, num_groups=g,
+                              active_groups=gp, capacity_factor=capf,
+                              gated=gated, activation=act,
+                              gate_outputs=gate_out)
+    p = init_tree(rf.param_defs(rcfg, lcfg), jax.random.PRNGKey(seed))
+    return rcfg, lcfg, p
+
+
+# ------------------------------------------------------ fused grouped op
+@pytest.mark.parametrize("bsz,s,d,dff,g,gp,gated,lora_on,capf", [
+    (2, 16, 32, 64, 4, 2, False, False, 4.0),
+    (1, 24, 32, 64, 4, 2, True, True, 4.0),
+    (2, 64, 32, 64, 8, 4, True, True, 0.25),     # forces capacity drops
+    (1, 16, 48, 96, 4, 3, False, True, 4.0),
+])
+def test_fused_grouped_matches_grouped(bsz, s, d, dff, g, gp, gated,
+                                       lora_on, capf):
+    rcfg, lcfg, p = _setup(d, dff, g, gp, gated, lora_on, capf)
+    x = jax.random.normal(jax.random.PRNGKey(1), (bsz, s, d))
+    yk, auxk = rffn_ops.routed_ffn(x, p, rcfg, lcfg, interpret=True)
+    yr, auxr = rf.routed_ffn(x, p, rcfg, lcfg, impl="grouped")
+    if capf < 1.0:                       # the drop case actually dropped
+        assert float(auxr["dropped"]) > 0.0
+    np.testing.assert_allclose(float(auxk["dropped"]),
+                               float(auxr["dropped"]), rtol=1e-6)
+    np.testing.assert_allclose(float(auxk["lb_loss"]),
+                               float(auxr["lb_loss"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_fused_grouped_skips_aux_at_inference():
+    rcfg, lcfg, p = _setup(32, 64, 4, 2, True, True)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32))
+    choice, gate_w, probs = rf.route(x, p["router"], rcfg, need_aux=False)
+    assert probs is None                       # no softmax at inference
+    y1, aux1 = rffn_ops.routed_ffn(x, p, rcfg, lcfg, interpret=True,
+                                   need_aux=False)
+    y0, aux0 = rffn_ops.routed_ffn(x, p, rcfg, lcfg, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y0))
+    assert float(aux1["lb_loss"]) == 0.0 and float(aux0["lb_loss"]) > 0.0
+    # jnp grouped path honors the same flag
+    yg, auxg = rf.routed_ffn(x, p, rcfg, lcfg, impl="grouped",
+                             need_aux=False)
+    assert float(auxg["lb_loss"]) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(yg),
+        np.asarray(rf.routed_ffn(x, p, rcfg, lcfg, impl="grouped")[0]))
+
+
+def test_grouped_kernel_tile_padding_invariance():
+    """Non-tile-multiple C and F zero-pad to the tile multiple (the old
+    kernel silently fell back to whole-dimension tiles): capacity 48 with
+    tile_c=32 pads to 64, F=16 with tile_f=12 pads to 24."""
+    rcfg, lcfg, p = _setup(32, 64, 4, 2, True, True)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 24, 32))
+    choice, gate_w, _ = rf.route(x, p["router"], rcfg, need_aux=False)
+    cap = dispatch.capacity(24, 4, 2, 4.0)
+    assert cap == 48
+    plan = dispatch.make_plan(choice, gate_w, 4, cap)
+    lp = {k: p[k] for k in ("lora_inner", "lora_gate", "lora_outer")}
+
+    def run(tc, tf):
+        return grouped_ffn_kernel(
+            x, plan.index, p["w_inner"], p["w_outer"], p["w_gate"], lp,
+            lcfg.scale, act=rcfg.activation, tile_c=tc, tile_f=tf,
+            interpret=True)
+
+    base = run(128, 256)                       # whole-dim tiles
+    assert base.shape == (2, 4, cap, 32)
+    ok = np.asarray(plan.slot_ok)[..., None]
+    for tc, tf in [(32, 256), (128, 12), (32, 12)]:
+        got = run(tc, tf)
+        assert got.shape == base.shape         # padding sliced back off
+        np.testing.assert_allclose(
+            np.where(ok, np.asarray(got), 0.0),
+            np.where(ok, np.asarray(base), 0.0), rtol=1e-4, atol=1e-4,
+            err_msg=f"tc={tc} tf={tf}")
+
+
+# ------------------------------------------------------------ decode path
+@pytest.mark.parametrize("b,d,dff,g,gp,gated,lora_on,gate_out", [
+    (4, 32, 64, 4, 2, False, False, False),
+    (3, 32, 96, 8, 4, True, True, False),
+    (2, 48, 96, 4, 3, True, True, True),
+    (5, 64, 128, 4, 1, False, True, True),
+])
+def test_decode_kernel_matches_grouped_and_ref(b, d, dff, g, gp, gated,
+                                               lora_on, gate_out):
+    rcfg, lcfg, p = _setup(d, dff, g, gp, gated, lora_on,
+                           gate_out=gate_out)
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, 1, d))
+    yk, aux = rffn_ops.routed_ffn_decode(x, p, rcfg, lcfg, interpret=True)
+    assert yk.shape == x.shape
+    assert float(aux["lb_loss"]) == 0.0
+    # vs the block-gather jnp oracle
+    choice, gate_w, _ = rf.route(x, p["router"], rcfg, need_aux=False)
+    lp = ({k: p[k] for k in ("lora_inner", "lora_gate", "lora_outer")
+           if k in p} if lora_on else None)
+    yr = decode_ffn_ref(x[:, 0], choice[:, 0], gate_w[:, 0], p["w_inner"],
+                        p["w_outer"], p.get("w_gate"), lp, lcfg.scale,
+                        act=rcfg.activation)
+    np.testing.assert_allclose(np.asarray(yk[:, 0]), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    # vs the grouped capacity path (no drops possible at S=1)
+    yg, _ = rf.routed_ffn(x, p, rcfg, lcfg, impl="grouped", need_aux=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yg),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_kernel_f_tile_padding_invariance():
+    rcfg, lcfg, p = _setup(48, 96, 4, 3, True, True, gate_out=True)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 1, 48))
+    choice, gate_w, _ = rf.route(x, p["router"], rcfg, need_aux=False)
+    lp = {k: p[k] for k in ("lora_inner", "lora_gate", "lora_outer")}
+    args = (x[:, 0], choice[:, 0], gate_w[:, 0], p["w_inner"],
+            p["w_outer"], p["w_gate"], lp, lcfg.scale)
+    a = decode_ffn_kernel(*args, act="gelu", tile_f=16, interpret=True)
+    b_ = decode_ffn_kernel(*args, act="gelu", tile_f=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_path_builds_no_dispatch_buffer():
+    """The acceptance property: at (B, 1, d) the decode path must not
+    materialize a (B, G, C, d) dispatch buffer — checked structurally on
+    the jaxpr (no intermediate carries the G*C slot plan)."""
+    rcfg, lcfg, p = _setup(32, 64, 8, 2, True, True)
+    b = 4
+    x = jnp.zeros((b, 1, 32))
+    jaxpr = jax.make_jaxpr(
+        lambda x: rffn_ops.routed_ffn_decode(x, p, rcfg, lcfg,
+                                             interpret=True)[0])(x)
+    g = rcfg.num_groups
+    for eqn in jaxpr.jaxpr.eqns:
+        for v in eqn.outvars:
+            shape = getattr(v.aval, "shape", ())
+            assert not (len(shape) == 4 and shape[0] == b
+                        and shape[1] == g), \
+                f"dispatch-shaped intermediate {shape} in decode path"
+
+
+# ------------------------------------------------------- dispatch gating
+def test_ffn_kernel_dispatch_switches(monkeypatch):
+    cfg = configs.get_smoke("qwen3-0.6b").with_spt(ffn_impl="pallas")
+    assert dispatch.use_routed_ffn_kernel(cfg)
+    assert dispatch.use_decode_ffn_kernel(cfg)          # auto follows
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1")
+    assert not dispatch.use_routed_ffn_kernel(cfg)
+    assert not dispatch.use_decode_ffn_kernel(cfg)
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
+    grouped = cfg.with_spt(ffn_impl="grouped")
+    assert not dispatch.use_routed_ffn_kernel(grouped)
+    assert not dispatch.use_decode_ffn_kernel(grouped)  # auto follows
+    assert dispatch.use_decode_ffn_kernel(
+        grouped.with_spt(decode_ffn_impl="kernel"))
+    assert not dispatch.use_decode_ffn_kernel(
+        cfg.with_spt(decode_ffn_impl="jnp"))
+
+
+def test_decode_ffn_impl_jnp_overrides_pallas():
+    """decode_ffn_impl="jnp" must force the grouped jnp path at decode
+    even when ffn_impl="pallas" keeps the train/prefill kernel on — the
+    per-path override exists so a suspected decode-kernel bug can be
+    bisected without the global kill switch."""
+    cfg = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=1, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256).with_spt(ffn_impl="pallas", decode_ffn_impl="jnp")
+    assert not dispatch.use_decode_ffn_kernel(cfg)
+    p = init_tree(ffn.ffn_defs(cfg), jax.random.PRNGKey(6))
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 1, 64))
+    jaxpr = jax.make_jaxpr(
+        lambda x: ffn.ffn_apply(p, x, cfg, mode="decode")[0])(x)
+    assert "pallas_call" not in str(jaxpr), "decode still lowers via Pallas"
+    y, _ = ffn.ffn_apply(p, x, cfg, mode="decode")
+    yg, _ = ffn.ffn_apply(p, x, cfg.with_spt(ffn_impl="grouped"),
+                          mode="decode")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yg))
+
+
+# ------------------------------------------------------------ engine e2e
+def test_engine_greedy_identical_kernel_on_vs_off(monkeypatch):
+    """ffn_impl="pallas" serves prefill through the fused grouped kernel
+    and decode through the block-gather kernel (inside the compiled
+    lax.while_loop chunk); greedy completions must be identical to the
+    grouped jnp path, and REPRO_DISABLE_KERNELS=1 must reproduce them
+    even with ffn_impl="pallas".  All-f32 keeps the accumulation-order
+    difference inside float noise (same rationale as the sparse-decode
+    engine test)."""
+    base = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256, dtype=jnp.float32).with_spt(
+            sparse_mha=False, ffn_capacity_factor=8.0)
+    assert ffn.routed_applicable(base)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32),
+        init_tree(model_defs(base), jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i, tokens=rng.integers(0, 256, size=ln).tolist(),
+                    max_new_tokens=3)
+            for i, ln in enumerate([7, 11])]
+
+    def run(impl, disable=False):
+        monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disable else "0")
+        cfg = base.with_spt(ffn_impl=impl)
+        eng = Engine(cfg, params, max_len=24, num_slots=2, decode_chunk=4)
+        try:
+            return [c.tokens for c in eng.run(reqs)]
+        finally:
+            monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
+
+    want = run("grouped")
+    assert run("pallas") == want
+    assert run("pallas", disable=True) == want          # kill switch
