@@ -9,6 +9,13 @@ Reports, per configuration:
   prefill_tok_s   — prompt tokens / sum of block_until_ready'd prefill calls
   decode_tok_s    — generated tokens / sum of block_until_ready'd decode
                     chunks (the continuous-batching steady state)
+
+``--paging`` additionally runs the honest KV-memory comparison at long
+max_len (contiguous strip vs paged pool at equal slot counts, measured
+peak pages, and the concurrent-slot count each layout supports under the
+contiguous layout's memory budget) and writes BENCH_paging.json — CPU
+stand-in numbers per the repo convention (compare across PRs, not
+against TPU).
 """
 import argparse
 import json
@@ -19,6 +26,7 @@ import jax
 from repro import configs
 from repro.core.params import init_tree
 from repro.launch.serve import build_requests
+from repro.serving import kv_pages as kvp
 from repro.serving.engine import Engine
 from repro.train.state import model_defs
 
@@ -46,11 +54,16 @@ def _variant_cfg(cfg, variant: str):
 
 
 def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
-          decode_chunk: int, ragged: bool, variant: str = "sparse") -> dict:
+          decode_chunk: int, ragged: bool, variant: str = "sparse",
+          max_len: int = 0, kv_layout: str = "contiguous",
+          page_size: int = 128, kv_pages=None) -> dict:
     cfg = _variant_cfg(configs.get_smoke(arch), variant)
+    cfg = cfg.with_spt(kv_layout=kv_layout, kv_page_size=page_size)
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_len=prompt_len + gen + 8,
-                    num_slots=slots, decode_chunk=decode_chunk)
+    max_len = max_len or prompt_len + gen + 8
+    engine = Engine(cfg, params, max_len=max_len,
+                    num_slots=slots, decode_chunk=decode_chunk,
+                    kv_pages=kv_pages)
     reqs = build_requests(cfg, requests, prompt_len, gen, ragged)
 
     t0 = time.perf_counter()
@@ -61,9 +74,10 @@ def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
     engine.run(reqs)
     steady_wall = time.perf_counter() - t0
     s = engine.last_stats
-    return {
+    row_b = kvp.kv_row_bytes(cfg)
+    row = {
         "arch": cfg.name, "variant": variant, "requests": requests,
-        "slots": slots,
+        "slots": slots, "max_len": max_len,
         "prompt_len": prompt_len, "gen": gen, "ragged": ragged,
         "compile_s": round(first_wall - steady_wall, 2),
         "steady_wall_s": round(steady_wall, 2),
@@ -71,7 +85,67 @@ def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
         "decode_tok_s": round(s.decode_tok_s, 1),
         "decode_steps": s.decode_steps,
         "decode_tokens": s.decode_tokens,
+        "kv_layout": kv_layout,
     }
+    if kv_layout == "paged":
+        row.update({
+            "page_size": s.page_size,
+            "kv_pages_total": s.kv_pages_total,
+            "kv_pages_peak": s.kv_pages_peak,
+            "admission_stalls": s.admission_stalls,
+            "kv_bytes_pool": s.kv_pages_total * s.page_size * row_b,
+            "kv_bytes_peak": s.kv_pages_peak * s.page_size * row_b,
+        })
+    else:
+        row["kv_bytes"] = slots * max_len * row_b
+    return row
+
+
+def paging_report(args) -> dict:
+    """Contiguous vs paged at long max_len, equal slot counts: KV bytes
+    allocated vs actually touched, and the concurrent-slot count each
+    layout supports under the contiguous layout's memory budget."""
+    kw = dict(requests=args.requests, slots=args.slots,
+              prompt_len=args.prompt_len, gen=args.gen,
+              decode_chunk=args.decode_chunk, ragged=False,
+              variant="dense", max_len=args.paging_max_len)
+    ps = args.page_size
+    probe = _variant_cfg(configs.get_smoke(args.arch), "dense")
+    if kvp.kv_row_bytes(probe) == 0:
+        raise SystemExit(
+            f"--paging: {args.arch} has no pageable attention cache "
+            "(SWA-ring-bounded or no attention layers); the contiguous-"
+            "vs-paged comparison is meaningless here")
+    contig = bench(args.arch, **kw)
+    # fixed budget: a quarter of the contiguous footprint — every request
+    # still completes (admission stalls instead of OOMing)
+    budget_pages = max(1, args.slots * kvp.num_pages(args.paging_max_len, ps)
+                       // 4)
+    paged = bench(args.arch, kv_layout="paged", page_size=ps,
+                  kv_pages=budget_pages, **kw)
+    # pages one request pins worst-case (prompt + budget rows)
+    ws = kvp.num_pages(args.prompt_len + args.gen - 1, ps)
+    budget_rows = args.slots * args.paging_max_len     # contiguous footprint
+    slots_at_budget = budget_rows // (ws * ps)
+    report = {
+        "note": scale_note(),
+        "config": {"arch": args.arch, "max_len": args.paging_max_len,
+                   "slots": args.slots, "requests": args.requests,
+                   "prompt_len": args.prompt_len, "gen": args.gen,
+                   "page_size": ps},
+        "contiguous": contig,
+        "paged": paged,
+        "kv_bytes_contiguous": contig["kv_bytes"],
+        "kv_bytes_paged_peak": paged["kv_bytes_peak"],
+        "kv_bytes_saved_frac": round(
+            1.0 - paged["kv_bytes_peak"] / contig["kv_bytes"], 4),
+        "slots_at_contiguous_budget": {"contiguous": args.slots,
+                                       "paged": int(slots_at_budget)},
+        "slot_ratio": round(slots_at_budget / args.slots, 1),
+    }
+    with open("BENCH_paging.json", "w") as f:
+        json.dump(report, f, indent=1)
+    return report
 
 
 def main():
@@ -86,14 +160,29 @@ def main():
                     help="comma list of dense|sparse|sparse-kernel|ffn|"
                          "ffn-kernel (*-kernel = fused Pallas paths; "
                          "interpret mode off-TPU, so opt-in)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=("contiguous", "paged"))
+    ap.add_argument("--page-size", type=int, default=128)
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="paged pool size (default contiguous parity)")
+    ap.add_argument("--paging", action="store_true",
+                    help="run the contiguous-vs-paged KV-memory comparison "
+                         "at --paging-max-len and write BENCH_paging.json")
+    ap.add_argument("--paging-max-len", type=int, default=8192)
     args = ap.parse_args()
+
+    if args.paging:
+        print(json.dumps(paging_report(args), indent=1))
+        return
 
     print(json.dumps({"note": scale_note()}))
     for variant in args.variants.split(","):
         for ragged in (False, True):
             row = bench(args.arch, args.requests, args.slots,
                         args.prompt_len, args.gen, args.decode_chunk,
-                        ragged, variant=variant.strip())
+                        ragged, variant=variant.strip(),
+                        kv_layout=args.kv_layout, page_size=args.page_size,
+                        kv_pages=args.kv_pages)
             print(json.dumps(row))
 
 

@@ -4,10 +4,14 @@
 # can iterate in a few minutes.  The Pallas kernel paths ARE exercised
 # here: tests/test_sparse_decode.py's parity cases run the fused decode
 # kernels under interpret=True on CPU (only the (S, L, dtype) sweep is
-# `slow`), and tests/test_routed_ffn_kernel.py runs the fused routed-FFN
+# `slow`), tests/test_routed_ffn_kernel.py runs the fused routed-FFN
 # grouped/decode kernels the same way (incl. the engine-level greedy
-# kernel-on == kernel-off check).  The tier-1 command stays the full
-# suite:
+# kernel-on == kernel-off check), and tests/test_moe_kernel.py covers
+# the MoE reuse of those kernels.  The paged-KV-cache suite
+# (tests/test_kv_paging.py: allocator units + engine-level paged ==
+# contiguous row-identity incl. the sparse decode kernel) is fast except
+# the wide (page_size x variant) sweep, which is `slow`.  The tier-1
+# command stays the full suite:
 #   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -49,6 +49,14 @@ class SPTConfig:
     # "jnp" = the grouped capacity path, "auto" = follow ffn_impl
     # ("pallas" -> kernel).  REPRO_DISABLE_KERNELS=1 forces jnp.
     decode_ffn_impl: str = "auto"   # auto | kernel | jnp
+    # serving KV-cache layout: "contiguous" = one max_len strip per decode
+    # slot; "paged" = fixed-size pages from a shared pool, mapped per slot
+    # by a page table (serving/kv_pages.py) so long and short requests
+    # share cache memory.  Engages only in the slot engine's decode path
+    # (prefill rows stay contiguous and are scattered into pages); ring-
+    # buffer SWA caches and recurrent states are never paged.
+    kv_layout: str = "contiguous"   # contiguous | paged
+    kv_page_size: int = 128         # rows per KV page (TPU lane-friendly)
     routed_ffn_in_experts: bool = False  # sub-route inside MoE experts
     lb_loss_weight: float = 0.01
     qerr_loss_weight: float = 0.0

@@ -172,6 +172,20 @@ def use_decode_ffn_kernel(cfg) -> bool:
     return impl == "kernel"
 
 
+def use_paged_kv(cfg) -> bool:
+    """Should the serving engine lay the KV cache out as fixed-size pages
+    (shared pool + per-slot page tables, serving/kv_pages.py) instead of
+    one contiguous max_len strip per slot?
+
+    cfg is a ModelConfig (duck-typed).  spt.kv_layout: "paged" |
+    "contiguous".  A pure layout decision — not a kernel — so the
+    REPRO_DISABLE_KERNELS kill switch does not apply; the engine
+    additionally requires transformer.paged_applicable(cfg) (an attention
+    stack without a SWA ring cache) before engaging it.
+    """
+    return getattr(cfg.spt, "kv_layout", "contiguous") == "paged"
+
+
 def load_balance_loss(router_probs: jax.Array, choice: jax.Array,
                       num_groups: int) -> jax.Array:
     """Switch-style auxiliary loss (paper §4.2 'load-balancing loss'):

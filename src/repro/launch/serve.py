@@ -26,7 +26,7 @@ from repro.train.state import model_defs
 
 
 def build_requests(cfg, num: int, prompt_len: int, gen: int,
-                   ragged: bool, seed: int = 1):
+                   ragged: bool, seed: int = 1, top_k: int = 0):
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(num):
@@ -38,7 +38,8 @@ def build_requests(cfg, num: int, prompt_len: int, gen: int,
             fe = rng.standard_normal(
                 (cfg.frontend_tokens, cfg.d_model)).astype(np.float32)
         reqs.append(Request(uid=i, tokens=toks.tolist(),
-                            max_new_tokens=gen, frontend_embeds=fe))
+                            max_new_tokens=gen, frontend_embeds=fe,
+                            top_k=top_k))
     return reqs
 
 
@@ -76,12 +77,29 @@ def main() -> int:
                          "Pallas kernel (no dispatch buffer) vs the grouped "
                          "jnp capacity path (auto follows --ffn-impl; "
                          "REPRO_DISABLE_KERNELS=1 forces jnp)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="serving KV-cache layout: 'paged' shares a pool of "
+                         "fixed-size pages across slots (admission waits for "
+                         "pages, not just a free slot) so long-context "
+                         "max_len no longer reserves a full strip per slot")
+    ap.add_argument("--page-size", type=int, default=128,
+                    help="rows per KV page (paged layout)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="page-pool size (default: contiguous-parity "
+                         "slots*ceil(max_len/page_size); set lower to serve "
+                         "under a fixed KV-memory budget)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling truncation inside the compiled "
+                         "decode chunk (0 = off; needs --temperature > 0)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
     cfg = cfg.with_spt(decode_attn_impl=args.decode_impl,
-                       decode_ffn_impl=args.decode_ffn_impl)
+                       decode_ffn_impl=args.decode_ffn_impl,
+                       kv_layout=args.kv_layout,
+                       kv_page_size=args.page_size)
     if args.ffn_impl is not None:
         cfg = cfg.with_spt(ffn_impl=args.ffn_impl)
     dp, tp = (int(x) for x in args.mesh.split("x"))
@@ -92,12 +110,13 @@ def main() -> int:
         engine = Engine(cfg, params,
                         max_len=args.prompt_len + args.gen + 8,
                         num_slots=args.slots, eos_id=args.eos_id,
-                        decode_chunk=args.decode_chunk)
+                        decode_chunk=args.decode_chunk,
+                        kv_pages=args.kv_pages)
         key = jax.random.PRNGKey(3) if args.temperature > 0 else None
         if cfg.family == "audio":
             return _serve_audio_legacy(cfg, engine, args, key)
         reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen,
-                              args.ragged)
+                              args.ragged, top_k=args.top_k)
 
         # warmup: absorbs tracing + compilation for every shape in the run
         t0 = time.perf_counter()

@@ -82,6 +82,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int) -> Dict[str, jax.Array]:
+    """Paged pool layout (serving/kv_pages.py): the per-slot (B, size, ...)
+    strips become a global (num_pages, page_size, ...) pool addressed via
+    the engine's slot->page table.  Same keys as init_cache so the rest of
+    the layer code walks both layouts."""
+    ps = cfg.spt.kv_page_size
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((num_pages, hk, ps, hd), cfg.dtype),
+        "v": jnp.zeros((num_pages, hk, ps, hd), cfg.dtype),
+        "slot_pos": jnp.full((num_pages, ps), -1, jnp.int32),
+    }
+    if sparse_applicable(cfg):
+        m = _pq_config(cfg).num_books
+        cache["codes"] = jnp.zeros((num_pages, hk, ps, m), jnp.int8)
+    return cache
+
+
 def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
                    window: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
     return jax.tree_util.tree_map(
@@ -155,6 +173,30 @@ def write_cache(cache: dict, cfg: ModelConfig, p: dict, k: jax.Array,
     return new
 
 
+def write_cache_paged(cache: dict, cfg: ModelConfig, p: dict, k: jax.Array,
+                      v: jax.Array, pos: jax.Array,
+                      page_table: jax.Array) -> dict:
+    """Decode-time paged scatter: one new token per slot at absolute
+    position ``pos`` (B,), routed to physical page page_table[b, pos//ps]
+    row pos%ps.  Slots whose page is unallocated (retired slots decoding
+    dead air inside a chunk) drop the write."""
+    from repro.serving import kv_pages
+    ps = cache["k"].shape[2]
+    pos = pos.astype(jnp.int32)
+    new = dict(cache)
+    new["k"] = kv_pages.scatter_row(cache["k"], page_table, pos,
+                                    k[:, :, 0], ps)
+    new["v"] = kv_pages.scatter_row(cache["v"], page_table, pos,
+                                    v[:, :, 0], ps)
+    new["slot_pos"] = kv_pages.scatter_row(cache["slot_pos"], page_table,
+                                           pos, pos, ps)
+    if "codes" in cache:
+        codes = pq.assign(k, p["pq"]["codebooks"])        # (B, Hk, 1, M)
+        new["codes"] = kv_pages.scatter_row(cache["codes"], page_table,
+                                            pos, codes[:, :, 0], ps)
+    return new
+
+
 def kv_valid_mask(cache: dict, q_pos: jax.Array,
                   window: Optional[int]) -> jax.Array:
     """(B, S) — slot holds a token visible to a query at q_pos (per batch)."""
@@ -203,7 +245,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                pos: Optional[jax.Array] = None,
                kv_x: Optional[jax.Array] = None,
                rope: bool = True,
-               kv_valid: Optional[jax.Array] = None
+               kv_valid: Optional[jax.Array] = None,
+               page_table: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Optional[dict], dict]:
     """Returns (y, new_cache, aux).  x: (B, S, d_model).
 
@@ -215,6 +258,9 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
     positions); when absent, or for ring-buffer SWA caches whose slot
     semantics the caller can't see, it is recomputed from the cache's
     slot_pos.
+    page_table: decode-mode only — (B, max_pages) int32 slot->page map
+    signalling that ``cache`` is a paged pool (serving/kv_pages.py).
+    Ring-buffer SWA caches ignore it (they are already window-bounded).
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -236,6 +282,44 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
         if mode == "prefill":
             assert cache is not None
             new_cache = write_cache(cache, cfg, p, k, v, pos_k)
+    elif mode == "decode" and page_table is not None and window is None:
+        # paged pool: scatter the new token into its slot's page, then
+        # attend over the gathered per-slot view (kernel-native page
+        # indexing is a ROADMAP follow-on; the gathered view is exactly
+        # what the contiguous path reads, so selection and masking are
+        # unchanged).
+        from repro.serving import kv_pages
+        assert cache is not None and pos is not None
+        pos_b = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
+        new_cache = write_cache_paged(cache, cfg, p, k, v, pos_b, page_table)
+        ps = new_cache["k"].shape[2]
+        k_view = kv_pages.gather_pages(new_cache["k"], page_table)
+        v_view = kv_pages.gather_pages(new_cache["v"], page_table)
+        s_view = k_view.shape[2]
+        if kv_valid is not None and kv_valid.shape[-1] == s_view:
+            valid = kv_valid                              # engine-tracked
+        else:
+            # self-derived: slot_pos visibility AND page-table occupancy
+            # (clamped gathers of unallocated pages read garbage rows)
+            sp = kv_pages.gather_pages(new_cache["slot_pos"], page_table)
+            valid = ((sp >= 0) & (sp <= pos_b[:, None])
+                     & kv_pages.occupancy(page_table, ps))
+        scale = hd ** -0.5
+        if sparse_applicable(cfg):
+            codes_view = kv_pages.gather_pages(new_cache["codes"],
+                                               page_table)
+            if kdispatch.use_sparse_decode_kernel(cfg):
+                from repro.kernels.sparse_attention import ops as sa_ops
+                out = sa_ops.sparse_mha_decode(
+                    q, k_view, v_view, codes_view, p["pq"]["codebooks"],
+                    _sa_config(cfg), scale, valid)
+            else:
+                out = sa.sparse_mha_decode(
+                    q, k_view, v_view, codes_view, p["pq"]["codebooks"],
+                    _sa_config(cfg), scale, valid)
+        else:
+            out = sa.dense_attention(q, k_view, v_view, scale, causal=False,
+                                     kv_valid=valid, chunk_q=1)
     elif mode == "decode":
         assert cache is not None and pos is not None
         new_cache = write_cache(cache, cfg, p, k, v, pos_q)

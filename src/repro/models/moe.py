@@ -6,10 +6,20 @@ are the same mechanism at different granularity (DESIGN.md
 §Arch-applicability).  Expert FFN hidden dims are sharded on the "model"
 mesh axis; experts themselves are replicated so routing stays local (no
 all-to-all in the baseline; an EP variant is a hillclimb option).
+
+Because the mechanism is identical, the fused routed-FFN Pallas kernels
+serve MoE too (ROADMAP "MoE kernel reuse"): ``spt.ffn_impl="pallas"``
+lowers train/prefill through ``grouped_ffn_kernel`` (in-kernel
+scalar-prefetch dispatch, softmax top-k gates in place of the |logit|
+router) with the jnp path as the differentiated reference, and serving
+decode at (B, 1, d) through ``decode_ffn_kernel`` (top-k expert ids
+scalar-prefetched into the weight-block index_maps — no dispatch buffer).
+``REPRO_DISABLE_KERNELS=1`` forces the jnp path everywhere.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import functools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,26 +72,44 @@ def moe_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
-def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
-              ) -> Tuple[jax.Array, dict]:
-    """x: (B, S, d) -> (y, aux).  The router softmax stays (it feeds the
-    top-k gates) but inference modes skip the load-balance loss.
-    Follow-on (ROADMAP): reuse the routed-FFN kernel switch here — the
-    dispatch mechanism is identical at expert granularity."""
-    lc = cfg.spt.lora
-    squeeze = x.ndim == 2
-    if squeeze:
-        x = x[None]
-    b, s, d = x.shape
-    e, k = cfg.num_experts, cfg.experts_per_token
+def _route_experts(p: dict, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Softmax router: (choice (B,S,k) int32, gate (B,S,k) f32 renormalized
+    over the top-k, probs (B,S,E) f32).  The softmax always runs — unlike
+    the routed FFN's |logit| router it feeds the gates, not just the
+    load-balance loss."""
+    k = cfg.experts_per_token
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
                         p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     gate, choice = jax.lax.top_k(probs, k)
     gate = gate / jnp.sum(gate, axis=-1, keepdims=True)   # renormalize top-k
-    cap = dispatch.capacity(s, e, k, cfg.moe_capacity_factor,
+    return choice.astype(jnp.int32), gate, probs
+
+
+def _moe_lora_tree(p: dict) -> Optional[dict]:
+    """Adapt MoE LoRA params to the routed-FFN kernels' lora_params layout
+    (identical shapes: experts are the group axis)."""
+    if "lora_wi" not in p:
+        return None
+    t = {"lora_inner": p["lora_wi"], "lora_outer": p["lora_wo"]}
+    if "lora_wg" in p:
+        t["lora_gate"] = p["lora_wg"]
+    return t
+
+
+def _moe_reference(x: jax.Array, p: dict, cfg: ModelConfig, need_aux: bool
+                   ) -> Tuple[jax.Array, dict]:
+    """The jnp capacity-dispatch path (BSpMV analogue) — also the
+    differentiated reference for the fused-kernel forward."""
+    lc = cfg.spt.lora
+    b, s, d = x.shape
+    e = cfg.num_experts
+    choice, gate, probs = _route_experts(p, x, cfg)
+    cap = dispatch.capacity(s, e, cfg.experts_per_token,
+                            cfg.moe_capacity_factor,
                             pad=cfg.spt.dispatch_pad)
-    plan = dispatch.make_plan(choice.astype(jnp.int32), gate, e, cap)
+    plan = dispatch.make_plan(choice, gate, e, cap)
     xg = dispatch.gather(x, plan)                        # (B, E, C, d)
     xg = shard(xg, "batch", None, None, None)
 
@@ -111,7 +139,97 @@ def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
     out = dispatch.combine(y, plan, s).astype(x.dtype)
     aux = {
         "lb_loss": (dispatch.load_balance_loss(probs, choice, e)
-                    if mode == "train" else jnp.zeros((), jnp.float32)),
+                    if need_aux else jnp.zeros((), jnp.float32)),
         "dropped": plan.dropped,
     }
+    return out, aux
+
+
+# ------------------------------------------------- fused kernel paths
+def _moe_kernel_forward(x: jax.Array, p: dict, cfg: ModelConfig,
+                        need_aux: bool) -> Tuple[jax.Array, dict]:
+    """Route + plan in jnp, expert GEMMs in the fused grouped kernel (the
+    token gather rides in-kernel via the scalar-prefetched plan index);
+    the combine scatter-add stays jnp, mirroring kernels/routed_ffn/ops."""
+    from repro.kernels.routed_ffn.routed_ffn import grouped_ffn_kernel
+    b, s, d = x.shape
+    e = cfg.num_experts
+    sg = jax.lax.stop_gradient
+    choice, gate, probs = _route_experts(p, x, cfg)
+    cap = dispatch.capacity(s, e, cfg.experts_per_token,
+                            cfg.moe_capacity_factor,
+                            pad=cfg.spt.dispatch_pad)
+    plan = dispatch.make_plan(choice, gate, e, cap)
+    y = grouped_ffn_kernel(
+        x, plan.index, sg(p["wi"]), sg(p["wo"]),
+        sg(p["wg"]) if cfg.gated_ffn else None,
+        _moe_lora_tree(p), cfg.spt.lora.scale, act=cfg.activation)
+    out = dispatch.combine(y.astype(x.dtype), plan, s)
+    aux = {
+        "lb_loss": (dispatch.load_balance_loss(probs, choice, e)
+                    if need_aux else jnp.zeros((), jnp.float32)),
+        "dropped": plan.dropped,
+    }
+    return out, aux
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _moe_kernel_op(x, p, cfg, need_aux):
+    return _moe_kernel_forward(x, p, cfg, need_aux)
+
+
+def _moe_kernel_fwd(x, p, cfg, need_aux):
+    return _moe_kernel_forward(x, p, cfg, need_aux), (x, p)
+
+
+def _moe_kernel_bwd(cfg, need_aux, res, cts):
+    # identical routing plan => identical function; differentiate the jnp
+    # reference (same contract as kernels/routed_ffn/ops.py)
+    x, p = res
+
+    def ref(x_, p_):
+        return _moe_reference(x_, p_, cfg, need_aux)
+
+    _, vjp = jax.vjp(ref, x, p)
+    return vjp(cts)
+
+
+_moe_kernel_op.defvjp(_moe_kernel_fwd, _moe_kernel_bwd)
+
+
+def _moe_decode_kernel(x: jax.Array, p: dict, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, dict]:
+    """Serving decode at (B, 1, d): the top-k expert ids index the expert
+    weight blocks directly in the block-gather kernel — no capacity plan,
+    no dispatch buffer, no scatter.  Inference-only (no VJP)."""
+    from repro.kernels.routed_ffn.routed_ffn import decode_ffn_kernel
+    sg = jax.lax.stop_gradient
+    choice, gate, _ = _route_experts(p, x, cfg)
+    y = decode_ffn_kernel(
+        x[:, 0], choice[:, 0], gate[:, 0], sg(p["wi"]), sg(p["wo"]),
+        sg(p["wg"]) if cfg.gated_ffn else None,
+        _moe_lora_tree(p), cfg.spt.lora.scale, act=cfg.activation)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "dropped": jnp.zeros((), jnp.float32)}
+    return y.astype(x.dtype)[:, None], aux
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
+              ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, aux).  The router softmax stays (it feeds the
+    top-k gates) but inference modes skip the load-balance loss.  With
+    ``spt.ffn_impl="pallas"`` (and REPRO_DISABLE_KERNELS unset) the expert
+    GEMMs lower through the fused routed-FFN kernels — decode-shaped
+    inputs skip the capacity plan entirely."""
+    need_aux = mode == "train"
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    if (mode == "decode" and x.shape[1] == 1
+            and dispatch.use_decode_ffn_kernel(cfg)):
+        out, aux = _moe_decode_kernel(x, p, cfg)
+    elif dispatch.use_routed_ffn_kernel(cfg):
+        out, aux = _moe_kernel_op(x, p, cfg, need_aux)
+    else:
+        out, aux = _moe_reference(x, p, cfg, need_aux)
     return (out[0] if squeeze else out), aux

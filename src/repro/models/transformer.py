@@ -62,14 +62,15 @@ def block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
 
 
 def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
-                mode: str, cache=None, pos=None, kv_valid=None
+                mode: str, cache=None, pos=None, kv_valid=None,
+                page_table=None
                 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     h = layers.apply_norm(p["norm_mix"], x, cfg.norm)
     if kind == "attn":
         y, new_cache, a_aux = attention.attn_apply(
             p["mixer"], h, cfg, mode=mode, causal=True, window=cfg.window,
-            cache=cache, pos=pos, kv_valid=kv_valid)
+            cache=cache, pos=pos, kv_valid=kv_valid, page_table=page_table)
     elif kind == "rec":
         y, new_cache, a_aux = rglru.rec_apply(
             p["mixer"], h, cfg, mode=mode, cache=cache)
@@ -116,9 +117,19 @@ def _is_axes(x):
     return isinstance(x, tuple)
 
 
-def block_cache_axes(cfg: ModelConfig, kind: str) -> dict:
+def block_cache_axes(cfg: ModelConfig, kind: str,
+                     kv_paged: bool = False) -> dict:
     """Logical partition axes mirroring block_cache structure."""
     if kind == "attn":
+        if kv_paged and cfg.window is None:
+            # paged pools: the page axis replaces batch and is kept
+            # replicated (multi-host page sharding is a ROADMAP follow-on)
+            ax = {"k": (None, "kv_heads", None, None),
+                  "v": (None, "kv_heads", None, None),
+                  "slot_pos": (None, None)}
+            if attention.sparse_applicable(cfg):
+                ax["codes"] = (None, "kv_heads", None, None)
+            return ax
         ax = {"k": ("batch", "kv_heads", "seq_shard", None),
               "v": ("batch", "kv_heads", "seq_shard", None),
               "slot_pos": ("batch", None)}
@@ -133,16 +144,16 @@ def block_cache_axes(cfg: ModelConfig, kind: str) -> dict:
     raise ValueError(kind)
 
 
-def cache_axes(cfg: ModelConfig) -> dict:
+def cache_axes(cfg: ModelConfig, kv_paged: bool = False) -> dict:
     units = {}
     for i, kind in enumerate(cfg.pattern):
-        ax = block_cache_axes(cfg, kind)
+        ax = block_cache_axes(cfg, kind, kv_paged)
         units[f"b{i}_{kind}"] = jax.tree_util.tree_map(
             lambda t: ("layer", *t), ax, is_leaf=_is_axes)
     out = {"units": units}
     tail = _tail_kinds(cfg)
     if tail:
-        out["tail"] = {f"t{i}_{kind}": block_cache_axes(cfg, kind)
+        out["tail"] = {f"t{i}_{kind}": block_cache_axes(cfg, kind, kv_paged)
                        for i, kind in enumerate(tail)}
     return out
 
@@ -170,17 +181,40 @@ def lm_init(cfg: ModelConfig, key: jax.Array) -> dict:
     return init_tree(lm_defs(cfg), key)
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def _kind_paged(cfg: ModelConfig, kind: str, kv_pages) -> bool:
+    """A block's cache uses the paged pool layout: attention without a SWA
+    ring (the ring is already window-bounded) under a paged engine."""
+    return kind == "attn" and kv_pages is not None and cfg.window is None
+
+
+def paged_applicable(cfg: ModelConfig) -> bool:
+    """The paged KV layout has something to page: at least one attention
+    block whose cache is a full-length strip (no SWA ring bound)."""
+    return ("attn" in cfg.pattern and cfg.window is None
+            and cfg.family != "audio")
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                kv_pages: Optional[int] = None) -> dict:
+    """kv_pages: when set, attention caches become (kv_pages, page_size,
+    ...) pools shared across slots (serving/kv_pages.py) instead of
+    per-slot (batch, max_len, ...) strips; recurrent/SSM states and SWA
+    ring caches keep the per-slot layout."""
+    def one_cache(kind):
+        if _kind_paged(cfg, kind, kv_pages):
+            return attention.init_paged_cache(cfg, kv_pages)
+        return block_cache(cfg, kind, batch, max_len)
+
     unit_caches = {}
     for i, kind in enumerate(cfg.pattern):
-        one = block_cache(cfg, kind, batch, max_len)
+        one = one_cache(kind)
         unit_caches[f"b{i}_{kind}"] = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (num_units(cfg), *x.shape)),
             one)
     caches = {"units": unit_caches}
     tail = _tail_kinds(cfg)
     if tail:
-        caches["tail"] = {f"t{i}_{kind}": block_cache(cfg, kind, batch, max_len)
+        caches["tail"] = {f"t{i}_{kind}": one_cache(kind)
                           for i, kind in enumerate(tail)}
     return caches
 
@@ -206,7 +240,8 @@ def _embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 
 def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
-                caches=None, pos=None, remat: bool = True, kv_valid=None
+                caches=None, pos=None, remat: bool = True, kv_valid=None,
+                page_table=None
                 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     aux_total = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
 
@@ -222,7 +257,8 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             name = f"b{i}_{kind}"
             c = None if unit_c is None else unit_c[name]
             h, nc, aux = block_apply(unit_p[name], h, cfg, kind, mode=mode,
-                                     cache=c, pos=pos, kv_valid=kv_valid)
+                                     cache=c, pos=pos, kv_valid=kv_valid,
+                                     page_table=page_table)
             new_caches[name] = nc
             for k in AUX_KEYS:
                 aux_u[k] = aux_u[k] + aux[k]
@@ -252,7 +288,8 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             c = None if caches is None else caches["tail"][name]
             x, nc, aux = block_apply(params["tail"][name], x, cfg, kind,
                                      mode=mode, cache=c, pos=pos,
-                                     kv_valid=kv_valid)
+                                     kv_valid=kv_valid,
+                                     page_table=page_table)
             tail_caches[name] = nc
             for k in AUX_KEYS:
                 aux_total[k] = aux_total[k] + aux[k]
@@ -299,17 +336,22 @@ def lm_prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 def lm_decode_step(params: dict, cfg: ModelConfig, caches: Any,
                    token: jax.Array, pos: jax.Array,
-                   kv_valid: Optional[jax.Array] = None
+                   kv_valid: Optional[jax.Array] = None,
+                   page_table: Optional[jax.Array] = None
                    ) -> Tuple[Any, jax.Array]:
     """One token for every sequence in the batch.  token: (B,);
     pos: () shared position, or (B,) per-slot positions (continuous
     batching decodes slots sitting at ragged depths).
     kv_valid: optional (B, cache_size) slot-validity mask computed ONCE by
     the caller (the serving engine) and shared by every attention layer —
-    otherwise each layer rederives it from its cache's slot positions."""
+    otherwise each layer rederives it from its cache's slot positions.
+    page_table: optional (B, max_pages) slot->page map — signals that the
+    attention caches in ``caches`` are paged pools (init_caches was called
+    with kv_pages); None means the contiguous strip layout."""
     x = _embed_inputs(params, cfg, {"tokens": token[:, None]}, pos0=pos)
     x, caches, _ = _run_blocks(params, cfg, x, mode="decode", caches=caches,
-                               pos=pos, remat=False, kv_valid=kv_valid)
+                               pos=pos, remat=False, kv_valid=kv_valid,
+                               page_table=page_table)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
     return caches, logits_of(params, cfg, x)
 
@@ -381,3 +423,84 @@ def write_slot_caches(dst: dict, row: dict, slot: jax.Array) -> dict:
     if "tail" in dst:
         new["tail"] = walk(dst["tail"], row["tail"], False)
     return new
+
+
+def _map_blocks(caches: dict, fn) -> dict:
+    """Apply fn(kind, block_cache_dict, lead) over every block's cache.
+    Block kind is recovered from the 'b{i}_{kind}' / 't{i}_{kind}' names."""
+    def one(tree, lead):
+        return {name: fn(name.split("_", 1)[1], blk, lead)
+                for name, blk in tree.items()}
+
+    new = {"units": one(caches["units"], True)}
+    if "tail" in caches:
+        new["tail"] = one(caches["tail"], False)
+    return new
+
+
+def write_slot_caches_paged(dst: dict, row: dict, slot: jax.Array,
+                            page_table: jax.Array, cfg: ModelConfig) -> dict:
+    """Paged counterpart of write_slot_caches: the batch-1 prefill `row`
+    (always contiguous — prefill compute is layout-agnostic) is scattered
+    page-wise into the pool entries listed in ``page_table[slot]``.
+    Recurrent/SSM states and SWA ring caches keep the per-slot scatter.
+    Page rows past the slot's allocation (bucketed right-pad overhang with
+    -1 page ids) are dropped — decode overwrites them before any read."""
+    from repro.serving import kv_pages
+
+    ps = cfg.spt.kv_page_size
+    pt_row = page_table[slot]                             # (MP,)
+
+    # walk dst and row in lockstep (same structure)
+    def one(dst_tree, row_tree, lead):
+        out = {}
+        for bname, blk in dst_tree.items():
+            kind = bname.split("_", 1)[1]
+            paged = kind == "attn" and cfg.window is None
+            rblk = row_tree[bname]
+            nb = {}
+            for name, v in blk.items():
+                r = rblk[name]
+                if paged:
+                    pad = -1 if name == "slot_pos" else 0
+                    if lead:                   # (U, 1, ...) -> vmap over U
+                        nb[name] = jax.vmap(
+                            lambda pool, seq: kv_pages.scatter_prefill(
+                                pool, pt_row, seq, ps, pad))(v, r[:, 0])
+                    else:
+                        nb[name] = kv_pages.scatter_prefill(
+                            v, pt_row, r[0], ps, pad)
+                elif lead:
+                    nb[name] = v.at[:, slot].set(r[:, 0].astype(v.dtype))
+                else:
+                    nb[name] = v.at[slot].set(r[0].astype(v.dtype))
+            out[bname] = nb
+        return out
+
+    new = {"units": one(dst["units"], row["units"], True)}
+    if "tail" in dst:
+        new["tail"] = one(dst["tail"], row["tail"], False)
+    return new
+
+
+def reset_page_slots(caches: dict, cfg: ModelConfig, pid: jax.Array,
+                     ok: jax.Array) -> dict:
+    """Invalidate slot_pos of freshly allocated pages (pid (B,), ok (B,)
+    from kv_pages.alloc_masked): a recycled page still carries its previous
+    tenant's slot_pos rows, which would look valid to the self-derived
+    kv_valid fallback.  K/V/code rows need no reset — they are masked by
+    validity until overwritten."""
+    dest = jnp.where(ok, pid, jnp.int32(1 << 30))         # huge -> drop
+
+    def blk_fn(kind, blk, lead):
+        if not (kind == "attn" and cfg.window is None):
+            return blk
+        new = dict(blk)
+        sp = blk["slot_pos"]
+        if lead:
+            new["slot_pos"] = sp.at[:, dest].set(-1, mode="drop")
+        else:
+            new["slot_pos"] = sp.at[dest].set(-1, mode="drop")
+        return new
+
+    return _map_blocks(caches, blk_fn)

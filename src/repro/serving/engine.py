@@ -23,7 +23,17 @@ slots (vLLM-style, in JAX):
     choices directly, so no (B, G, C, d) dispatch buffer is built and
     the router's softmax/load-balance aux is skipped (inference mode);
   * slots retire on EOS or on their per-request token budget, freeing the
-    slot for the next queued request.
+    slot for the next queued request;
+  * with `SPTConfig.kv_layout="paged"` the attention caches are pools of
+    fixed-size pages shared across slots (serving/kv_pages.py): admission
+    requires a free slot AND pages for the request's worst case, pages
+    grow on demand *inside* the compiled chunk (pure allocator state in
+    the while_loop carry), and retirement frees them — so short requests
+    no longer pin max_len-sized strips and long-context max_len stops
+    capping the slot count;
+  * per-request sampling (Request.temperature / Request.top_k) runs
+    inside the chunk via per-slot arrays; greedy decoding remains the
+    bit-identical default.
 
 Timing is honest: prefill and decode are accumulated separately with
 `block_until_ready` at each boundary, and reported via `ServeStats` so
@@ -41,7 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import dispatch as kdispatch
 from repro.models import attention, encdec, ffn, transformer
+from repro.serving import kv_pages as kvp
 
 
 def build_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
@@ -64,21 +76,23 @@ def build_decode_step(cfg: ModelConfig) -> Callable:
     return decode
 
 
-def abstract_decode_caches(cfg: ModelConfig, batch: int, cache_len: int):
+def abstract_decode_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                           kv_pages: Optional[int] = None):
     if cfg.family == "audio":
         fn = lambda: encdec.init_dec_caches(cfg, batch, cache_len,
                                             cfg.frontend_tokens)
     else:
-        fn = lambda: transformer.init_caches(cfg, batch, cache_len)
+        fn = lambda: transformer.init_caches(cfg, batch, cache_len,
+                                             kv_pages=kv_pages)
     shapes = jax.eval_shape(fn)
     return jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), shapes)
 
 
-def decode_cache_axes(cfg: ModelConfig):
+def decode_cache_axes(cfg: ModelConfig, kv_paged: bool = False):
     if cfg.family == "audio":
         return encdec.cache_axes(cfg)
-    return transformer.cache_axes(cfg)
+    return transformer.cache_axes(cfg, kv_paged=kv_paged)
 
 
 # ---------------------------------------------------------------- requests
@@ -89,6 +103,11 @@ class Request:
     tokens: Sequence[int]                  # prompt token ids
     max_new_tokens: int = 16
     frontend_embeds: Optional[Any] = None  # (F, d) for VLM-style frontends
+    # per-request sampling (applied inside the compiled decode chunk):
+    # temperature None = inherit run()'s temperature; <= 0 = greedy.
+    # top_k 0 = no truncation; 1 = deterministic argmax sampling.
+    temperature: Optional[float] = None
+    top_k: int = 0
 
 
 @dataclasses.dataclass
@@ -109,6 +128,11 @@ class ServeStats:
     decode_steps: int = 0                  # batch-wide while_loop trips
     admitted: int = 0
     completed: int = 0
+    # paged KV cache (zeros when kv_layout="contiguous")
+    page_size: int = 0
+    kv_pages_total: int = 0                # pool capacity in pages
+    kv_pages_peak: int = 0                 # peak pages in use
+    admission_stalls: int = 0              # free slot but no pages
 
     @property
     def prefill_tok_s(self) -> float:
@@ -126,7 +150,12 @@ class ServeStats:
                 "decode_steps": self.decode_steps,
                 "prefill_tok_s": round(self.prefill_tok_s, 1),
                 "decode_tok_s": round(self.decode_tok_s, 1),
-                "admitted": self.admitted, "completed": self.completed}
+                "admitted": self.admitted, "completed": self.completed,
+                **({"page_size": self.page_size,
+                    "kv_pages_total": self.kv_pages_total,
+                    "kv_pages_peak": self.kv_pages_peak,
+                    "admission_stalls": self.admission_stalls}
+                   if self.kv_pages_total else {})}
 
 
 @dataclasses.dataclass
@@ -149,7 +178,7 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
                  jit: bool = True, *, num_slots: int = 8,
                  eos_id: Optional[int] = None, decode_chunk: int = 16,
-                 pad_id: int = 0):
+                 pad_id: int = 0, kv_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -159,6 +188,19 @@ class Engine:
         self.pad_id = pad_id
         self.last_stats: Optional[ServeStats] = None
         self._use_jit = jit
+        # paged KV cache: pool of kv_pages fixed-size pages shared across
+        # slots (cfg.spt.kv_layout="paged"); kv_pages=None defaults to the
+        # contiguous footprint — pass a smaller pool to serve under a
+        # fixed cache-memory budget.
+        self._paged = (kdispatch.use_paged_kv(cfg)
+                       and transformer.paged_applicable(cfg))
+        self.page_size = cfg.spt.kv_page_size if self._paged else 0
+        if self._paged:
+            self.max_pages_per_slot = kvp.num_pages(max_len, self.page_size)
+            self.kv_pages = (num_slots * self.max_pages_per_slot
+                             if kv_pages is None else int(kv_pages))
+        else:
+            self.kv_pages = 0
         # legacy per-token step fns (audio family + sampled generate())
         self._prefill = build_prefill_step(cfg, max_len)
         self._decode = build_decode_step(cfg)
@@ -167,9 +209,22 @@ class Engine:
             self._decode = jax.jit(self._decode, donate_argnums=(1,))
         self._prefill_one: Optional[Callable] = None
         self._chunk_cache: Dict[Any, Callable] = {}
-        self._write_slot = (
-            jax.jit(transformer.write_slot_caches, donate_argnums=(0,))
-            if jit else transformer.write_slot_caches)
+        if self._paged:
+            def _ws(caches, row, slot, page_table):
+                return transformer.write_slot_caches_paged(
+                    caches, row, slot, page_table, cfg)
+            self._write_slot = (jax.jit(_ws, donate_argnums=(0,))
+                                if jit else _ws)
+            self._alloc_slot = (
+                jax.jit(kvp.alloc_slot_pages, donate_argnums=(0, 1))
+                if jit else kvp.alloc_slot_pages)
+            self._free_slot = (
+                jax.jit(kvp.free_slot_pages, donate_argnums=(0, 1))
+                if jit else kvp.free_slot_pages)
+        else:
+            self._write_slot = (
+                jax.jit(transformer.write_slot_caches, donate_argnums=(0,))
+                if jit else transformer.write_slot_caches)
 
     # ------------------------------------------------------------ prefill
     def _pad_invariant(self) -> bool:
@@ -234,30 +289,71 @@ class Engine:
             return fn
         cfg, chunk_steps = self.cfg, self.decode_chunk
         cache_len = self.max_len
+        paged, ps = self._paged, self.page_size
+        if paged:
+            view = kvp.view_len(self.max_len, ps)
 
-        def chunk(params, caches, tok, pos, active, n, limit, buf, keys,
-                  temp):
+        def sample_fn(keys, n, lg, temps, topks):
+            """Per-slot temperature + top-k sampling; slots with temp <= 0
+            fall back to argmax (mixed batches share one compiled chunk)."""
+            kb = jax.vmap(jax.random.fold_in)(keys, n)
+            vocab = lg.shape[-1]
+
+            def draw(k, l, tmp, tk):
+                scaled = l / jnp.maximum(tmp, 1e-6)
+                srt = -jnp.sort(-scaled)                  # descending
+                thr = srt[jnp.clip(tk - 1, 0, vocab - 1)]
+                masked = jnp.where((tk > 0) & (scaled < thr),
+                                   -jnp.inf, scaled)
+                return jax.random.categorical(k, masked).astype(jnp.int32)
+
+            sampled = jax.vmap(draw)(kb, lg, temps, topks)
+            return jnp.where(temps > 0.0, sampled,
+                             jnp.argmax(lg, axis=-1).astype(jnp.int32))
+
+        def chunk(params, caches, page_table, astate, tok, pos, active, n,
+                  limit, buf, keys, temps, topks):
             def cond(c):
-                return (c[0] < chunk_steps) & jnp.any(c[4])
+                return (c[0] < chunk_steps) & jnp.any(c[6])
 
             def body(c):
-                t, caches, tok, pos, active, n, buf = c
-                # slot validity from the engine's per-slot positions, built
-                # ONCE per step and shared by every attention layer (slots
-                # fill in position order, so slot j is live iff j <= pos;
-                # ring-buffer SWA layers recompute their own window mask)
-                kv_valid = (jnp.arange(cache_len, dtype=jnp.int32)[None, :]
-                            <= pos[:, None])
-                caches, logits = transformer.lm_decode_step(
-                    params, cfg, caches, tok, pos, kv_valid=kv_valid)
+                t, caches, page_table, astate, tok, pos, active, n, buf = c
+                if paged:
+                    # grow pages in-loop: a slot writing the first row of a
+                    # new page pops one from the free list (admission
+                    # reserved the worst case, so the pop cannot fail)
+                    needs = active & (pos % ps == 0)
+                    astate, pid, ok = kvp.alloc_masked(astate, needs)
+                    bidx = jnp.arange(slots, dtype=jnp.int32)
+                    pj = jnp.clip(pos // ps, 0, page_table.shape[1] - 1)
+                    page_table = page_table.at[bidx, pj].set(
+                        jnp.where(ok, pid, page_table[bidx, pj]))
+                    caches = transformer.reset_page_slots(caches, cfg,
+                                                          pid, ok)
+                    # validity = engine positions AND page occupancy
+                    kv_valid = (
+                        (jnp.arange(view, dtype=jnp.int32)[None, :]
+                         <= pos[:, None])
+                        & kvp.occupancy(page_table, ps))
+                    caches, logits = transformer.lm_decode_step(
+                        params, cfg, caches, tok, pos, kv_valid=kv_valid,
+                        page_table=page_table)
+                else:
+                    # slot validity from the engine's per-slot positions,
+                    # built ONCE per step and shared by every attention
+                    # layer (slots fill in position order, so slot j is
+                    # live iff j <= pos; ring-buffer SWA layers recompute
+                    # their own window mask)
+                    kv_valid = (jnp.arange(cache_len,
+                                           dtype=jnp.int32)[None, :]
+                                <= pos[:, None])
+                    caches, logits = transformer.lm_decode_step(
+                        params, cfg, caches, tok, pos, kv_valid=kv_valid)
                 lg = logits[:, -1].astype(jnp.float32)          # (B, V)
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 else:
-                    kb = jax.vmap(jax.random.fold_in)(keys, n)
-                    nxt = jax.vmap(
-                        lambda k, l: jax.random.categorical(k, l / temp)
-                    )(kb, lg).astype(jnp.int32)
+                    nxt = sample_fn(keys, n, lg, temps, topks)
                 bidx = jnp.arange(slots, dtype=jnp.int32)
                 col = jnp.clip(n, 0, max_gen - 1)
                 buf = buf.at[bidx, col].set(
@@ -270,15 +366,18 @@ class Engine:
                     done |= nxt == eos_id
                 tok = jnp.where(active, nxt, tok)
                 active = active & ~done
-                return t + 1, caches, tok, pos, active, n, buf
+                return (t + 1, caches, page_table, astate, tok, pos,
+                        active, n, buf)
 
-            t, caches, tok, pos, active, n, buf = jax.lax.while_loop(
+            (t, caches, page_table, astate, tok, pos, active, n,
+             buf) = jax.lax.while_loop(
                 cond, body,
-                (jnp.zeros((), jnp.int32), caches, tok, pos, active, n, buf))
-            return caches, tok, pos, active, n, buf, t
+                (jnp.zeros((), jnp.int32), caches, page_table, astate, tok,
+                 pos, active, n, buf))
+            return caches, page_table, astate, tok, pos, active, n, buf, t
 
         if self._use_jit:
-            chunk = jax.jit(chunk, donate_argnums=(1,))
+            chunk = jax.jit(chunk, donate_argnums=(1, 2, 3))
         self._chunk_cache[key] = chunk
         return chunk
 
@@ -301,6 +400,15 @@ class Engine:
         if len(set(uids)) != len(uids):
             raise ValueError("duplicate request uids")
         frontend = cfg.frontend_tokens if cfg.frontend else 0
+        ps = self.page_size
+
+        def pages_ws(r: Request) -> int:
+            """Worst-case pages this request can ever hold: one per page of
+            rows [0, prompt_end + max_new - 1) — the last decode write
+            lands at position prompt_end + max_new - 2."""
+            rows = frontend + len(r.tokens) + r.max_new_tokens - 1
+            return kvp.num_pages(max(1, rows), ps)
+
         for r in requests:
             if r.max_new_tokens < 1:
                 raise ValueError(f"request {r.uid}: max_new_tokens < 1")
@@ -313,16 +421,33 @@ class Engine:
                 raise ValueError(
                     f"request {r.uid} needs {need} positions > "
                     f"max_len={self.max_len}")
+            if self._paged and pages_ws(r) > self.kv_pages:
+                raise ValueError(
+                    f"request {r.uid} needs {pages_ws(r)} KV pages > "
+                    f"pool size {self.kv_pages}")
 
         slots = self.num_slots
-        greedy = temperature <= 0.0 or key is None
+        eff_temp = {r.uid: (temperature if r.temperature is None
+                            else r.temperature) for r in requests}
+        sampling = key is not None and any(t > 0.0 for t in eff_temp.values())
+        greedy = not sampling
         base_key = key if key is not None else jax.random.PRNGKey(0)
         max_gen = max((r.max_new_tokens for r in requests), default=1)
-        stats = ServeStats()
+        stats = ServeStats(page_size=ps, kv_pages_total=self.kv_pages)
         queue = collections.deque(requests)
         completions: Dict[int, Completion] = {}
 
-        caches = transformer.init_caches(cfg, slots, self.max_len)
+        caches = transformer.init_caches(
+            cfg, slots, self.max_len,
+            kv_pages=self.kv_pages if self._paged else None)
+        if self._paged:
+            page_table = kvp.init_page_table(slots, self.max_pages_per_slot)
+            astate = kvp.init_state(self.kv_pages)
+        else:                       # inert placeholders riding the carry
+            page_table = kvp.init_page_table(slots, 1)
+            astate = kvp.init_state(1)
+        reserved = 0                            # host-side page accounting
+        slot_ws = [0] * slots
         tok = np.zeros(slots, np.int32)
         pos = np.zeros(slots, np.int32)
         active = np.zeros(slots, bool)
@@ -330,10 +455,13 @@ class Engine:
         limit = np.ones(slots, np.int32)
         buf = np.zeros((slots, max_gen), np.int32)
         keys = np.zeros((slots, 2), np.uint32)
+        temps = np.zeros(slots, np.float32)
+        topks = np.zeros(slots, np.int32)
         slot_req: List[Optional[Request]] = [None] * slots
         chunk_fn = self._get_chunk(slots, max_gen, greedy, eos_id)
 
         def retire(b: int):
+            nonlocal astate, page_table, reserved
             r = slot_req[b]
             toks = buf[b, :n_gen[b]].tolist()
             reason = ("eos" if eos_id is not None and toks
@@ -344,15 +472,40 @@ class Engine:
             slot_req[b] = None
             active[b] = False
             stats.completed += 1
+            if self._paged:
+                astate, page_table = self._free_slot(astate, page_table,
+                                                     jnp.int32(b))
+                reserved -= slot_ws[b]
+                slot_ws[b] = 0
+
+        def track_peak():
+            if self._paged:
+                used = self.kv_pages - int(jax.device_get(astate["top"]))
+                stats.kv_pages_peak = max(stats.kv_pages_peak, used)
 
         while queue or any(s is not None for s in slot_req):
-            # -------- admit queued requests into free slots
+            # -------- admit queued requests into free slots (FIFO; a
+            # request that does not fit the page pool stalls the queue
+            # until retiring slots release their reservations)
             while queue and any(s is None for s in slot_req):
+                r = queue[0]
+                if self._paged and pages_ws(r) > self.kv_pages - reserved:
+                    stats.admission_stalls += 1
+                    break
+                queue.popleft()
                 b = next(i for i, s in enumerate(slot_req) if s is None)
-                r = queue.popleft()
                 t0 = time.perf_counter()
                 row, logits = self._prefill_request(r)
-                caches = self._write_slot(caches, row, jnp.int32(b))
+                if self._paged:
+                    reserved += pages_ws(r)
+                    slot_ws[b] = pages_ws(r)
+                    npg0 = kvp.num_pages(frontend + len(r.tokens), ps)
+                    astate, page_table = self._alloc_slot(
+                        astate, page_table, jnp.int32(b), jnp.int32(npg0))
+                    caches = self._write_slot(caches, row, jnp.int32(b),
+                                              page_table)
+                else:
+                    caches = self._write_slot(caches, row, jnp.int32(b))
                 logits = jax.block_until_ready(logits)
                 jax.block_until_ready(caches)
                 stats.prefill_s += time.perf_counter() - t0
@@ -360,13 +513,21 @@ class Engine:
                 stats.admitted += 1
                 lg = np.asarray(logits[0, -1], np.float32)
                 skey = jax.random.fold_in(base_key, r.uid)
-                if greedy:
+                t_r = eff_temp[r.uid]
+                if greedy or t_r <= 0.0:
                     first = int(lg.argmax())
                 else:
+                    scaled = lg / max(t_r, 1e-6)
+                    if r.top_k > 0:
+                        thr = np.sort(scaled)[::-1][
+                            min(r.top_k, scaled.size) - 1]
+                        scaled = np.where(scaled < thr, -np.inf, scaled)
                     first = int(jax.random.categorical(
-                        jax.random.fold_in(skey, 0), lg / temperature))
+                        jax.random.fold_in(skey, 0), jnp.asarray(scaled)))
                 slot_req[b] = r
                 keys[b] = np.asarray(skey, np.uint32)
+                temps[b] = t_r
+                topks[b] = r.top_k
                 tok[b] = first
                 pos[b] = frontend + len(r.tokens)
                 n_gen[b] = 1
@@ -378,18 +539,22 @@ class Engine:
                 active[b] = not done_now
                 if done_now:
                     retire(b)
+            track_peak()
             if not active.any():
                 continue            # all admitted work finished; drain queue
             # -------- one decode chunk (compiled once per shape)
             t0 = time.perf_counter()
-            out = chunk_fn(self.params, caches, jnp.asarray(tok),
-                           jnp.asarray(pos), jnp.asarray(active),
-                           jnp.asarray(n_gen), jnp.asarray(limit),
-                           jnp.asarray(buf), jnp.asarray(keys),
-                           jnp.float32(temperature if temperature > 0 else 1))
+            out = chunk_fn(self.params, caches, page_table, astate,
+                           jnp.asarray(tok), jnp.asarray(pos),
+                           jnp.asarray(active), jnp.asarray(n_gen),
+                           jnp.asarray(limit), jnp.asarray(buf),
+                           jnp.asarray(keys), jnp.asarray(temps),
+                           jnp.asarray(topks))
             out = jax.block_until_ready(out)
-            caches, tok_d, pos_d, act_d, n_d, buf_d, steps = out
+            (caches, page_table, astate, tok_d, pos_d, act_d, n_d, buf_d,
+             steps) = out
             stats.decode_s += time.perf_counter() - t0
+            track_peak()
             prev_total = int(n_gen.sum())
             # writable host mirrors (np.asarray of a jax array is read-only)
             tok = np.array(tok_d)

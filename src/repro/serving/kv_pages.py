@@ -1,0 +1,202 @@
+"""Paged KV cache: page allocator, slot->page tables, and paged views.
+
+The serving engine's contiguous layout reserves a full ``max_len`` KV strip
+per decode slot, so one long-context request pins as much cache memory as
+dozens of short chats.  This module pages the cache into fixed-size blocks
+(``page_size`` rows each) drawn from a shared pool:
+
+  * the **pool** replaces each attention layer's per-slot ``(B, size, ...)``
+    cache with a global ``(num_pages, page_size, ...)`` tensor;
+  * the **page table** ``(num_slots, max_pages)`` int32 maps each slot's
+    logical page j to a physical page id (-1 = unallocated);
+  * the **allocator** is a free-list *stack* held in device arrays
+    (``{"free": (P,) int32, "top": () int32}``) with alloc/free as pure
+    functions, so page growth can ride inside the engine's compiled
+    ``lax.while_loop`` decode chunk (a slot crossing a page boundary
+    allocates its next page in-loop, no host round-trip).
+
+Exhaustion never corrupts state: a failed alloc returns page id -1, and
+every paged write routes -1 ids out of bounds under ``mode="drop"``.  The
+engine's admission control ("free slot AND pages available") reserves each
+request's worst-case page count up front, which makes in-loop allocation
+infallible by construction — the free list can only run dry if reservation
+accounting is violated.
+
+Everything here is pure jax + ints; no model imports (models/attention.py
+imports *this* for the paged gather/scatter views).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+AllocState = Dict[str, jax.Array]
+
+
+# ------------------------------------------------------------ shape math
+def num_pages(rows: int, page_size: int) -> int:
+    """Pages needed to back ``rows`` cache rows (host-side, static)."""
+    return max(1, -(-int(rows) // int(page_size)))
+
+
+def pool_pages(num_slots: int, max_len: int, page_size: int) -> int:
+    """Default pool size: parity with the contiguous layout's footprint
+    (every slot could still grow to max_len).  Callers shrink this to an
+    actual memory budget to realize the paging win."""
+    return num_slots * num_pages(max_len, page_size)
+
+
+def view_len(max_len: int, page_size: int) -> int:
+    """Length of the per-slot gathered view: max_pages * page_size
+    (>= max_len; the overhang is never valid)."""
+    return num_pages(max_len, page_size) * page_size
+
+
+# ------------------------------------------------------------- allocator
+def init_state(total_pages: int) -> AllocState:
+    """Fresh allocator: all pages free.  ``free[0:top]`` hold the free ids
+    (a stack; alloc pops from ``free[top-1]``, free pushes back)."""
+    return {"free": jnp.arange(total_pages, dtype=jnp.int32),
+            "top": jnp.asarray(total_pages, jnp.int32)}
+
+
+def init_page_table(num_slots: int, max_pages: int) -> jax.Array:
+    return jnp.full((num_slots, max_pages), -1, jnp.int32)
+
+
+def alloc_masked(state: AllocState, want: jax.Array
+                 ) -> Tuple[AllocState, jax.Array, jax.Array]:
+    """Pop one page per True entry of ``want`` (any shape, vectorized).
+
+    Returns (state', page_ids, ok) with page_ids == -1 (and ok False)
+    where ``want`` is False or the pool is exhausted.  Pure; safe inside
+    lax.while_loop bodies."""
+    free, top = state["free"], state["top"]
+    p = free.shape[0]
+    w = want.astype(jnp.int32)
+    rank = jnp.cumsum(w.reshape(-1)).reshape(w.shape) - w   # 0-based
+    idx = top - 1 - rank
+    ok = want & (idx >= 0)
+    pid = jnp.where(ok, free[jnp.clip(idx, 0, p - 1)], jnp.int32(-1))
+    new_top = top - jnp.sum(ok.astype(jnp.int32))
+    return {"free": free, "top": new_top}, pid, ok
+
+
+def alloc_slot_pages(state: AllocState, page_table: jax.Array,
+                     slot: jax.Array, n: jax.Array
+                     ) -> Tuple[AllocState, jax.Array]:
+    """Allocate the first ``n`` (traced scalar) pages of ``slot``'s row,
+    replacing the whole row (so a recycled slot starts clean).  One
+    compiled shape serves every n."""
+    mp = page_table.shape[1]
+    want = jnp.arange(mp, dtype=jnp.int32) < jnp.asarray(n, jnp.int32)
+    state, pid, _ = alloc_masked(state, want)
+    return state, page_table.at[slot].set(pid)
+
+
+def free_slot_pages(state: AllocState, page_table: jax.Array,
+                    slot: jax.Array) -> Tuple[AllocState, jax.Array]:
+    """Push all of ``slot``'s allocated pages back on the free stack and
+    clear its page-table row."""
+    free, top = state["free"], state["top"]
+    p = free.shape[0]
+    row = page_table[slot]                                # (MP,)
+    valid = row >= 0
+    v = valid.astype(jnp.int32)
+    rank = jnp.cumsum(v) - v
+    dest = jnp.where(valid, top + rank, jnp.int32(p))     # p -> dropped
+    free = free.at[dest].set(row, mode="drop")
+    top = top + jnp.sum(v)
+    return ({"free": free, "top": top},
+            page_table.at[slot].set(jnp.int32(-1)))
+
+
+def pages_in_use(state: AllocState) -> jax.Array:
+    return jnp.asarray(state["free"].shape[0], jnp.int32) - state["top"]
+
+
+# ----------------------------------------------------------- paged views
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize per-slot contiguous views from a page pool.
+
+    pool (P, Hk, ps, X) -> (B, Hk, MP*ps, X);  pool (P, ps) -> (B, MP*ps).
+    Unallocated entries (-1) clamp to page 0 — callers MUST mask those
+    rows via ``occupancy`` (or an engine kv_valid that includes it); the
+    clamped reads are garbage-but-finite, never NaN."""
+    pt = jnp.maximum(page_table, 0)
+    g = jnp.take(pool, pt, axis=0)                        # (B, MP, ...)
+    if pool.ndim == 2:
+        b, mp, ps = g.shape
+        return g.reshape(b, mp * ps)
+    b, mp, hk, ps, x = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hk, mp * ps, x)
+
+
+def occupancy(page_table: jax.Array, page_size: int) -> jax.Array:
+    """(B, MP*ps) bool — view row is backed by an allocated page."""
+    return jnp.repeat(page_table >= 0, page_size, axis=1)
+
+
+def scatter_row(pool: jax.Array, page_table: jax.Array, pos: jax.Array,
+                val: jax.Array, page_size: int) -> jax.Array:
+    """Write one row per slot at absolute position ``pos`` (B,).
+
+    pool (P, Hk, ps, X) takes val (B, Hk, X); pool (P, ps) takes val (B,)
+    (broadcastable).  Rows whose page is unallocated are dropped."""
+    p = pool.shape[0]
+    pj = pos // page_size
+    row = pos % page_size
+    pid = jnp.take_along_axis(page_table, pj[:, None], axis=1)[:, 0]
+    dest = jnp.where(pid >= 0, pid, jnp.int32(p))         # OOB -> drop
+    if pool.ndim == 2:
+        return pool.at[dest, row].set(val, mode="drop")
+    return pool.at[dest, :, row].set(val.astype(pool.dtype), mode="drop")
+
+
+def scatter_prefill(pool: jax.Array, page_table_row: jax.Array,
+                    seq: jax.Array, page_size: int,
+                    pad_value=0) -> jax.Array:
+    """Scatter a contiguous batch-1 prefill row into ``slot``'s pages.
+
+    pool (P, Hk, ps, X) takes seq (Hk, L, X); pool (P, ps) takes seq (L,).
+    L is zero-padded (``pad_value`` for slot_pos) up to a page multiple;
+    pages beyond the slot's allocation (-1 ids, e.g. bucketed right-pad
+    overhang) are dropped — those rows are never read before decode
+    overwrites them."""
+    p, ps = pool.shape[0], page_size
+    l = seq.shape[-2] if pool.ndim == 4 else seq.shape[-1]
+    npg = num_pages(l, ps)
+    pad = npg * ps - l
+    ids = page_table_row[:npg]
+    dest = jnp.where(ids >= 0, ids, jnp.int32(p))
+    if pool.ndim == 2:
+        rows = jnp.pad(seq, (0, pad), constant_values=pad_value)
+        return pool.at[dest].set(rows.reshape(npg, ps), mode="drop")
+    hk, _, x = seq.shape
+    rows = jnp.pad(seq, ((0, 0), (0, pad), (0, 0)))
+    rows = rows.reshape(hk, npg, ps, x).transpose(1, 0, 2, 3)
+    return pool.at[dest].set(rows.astype(pool.dtype), mode="drop")
+
+
+# ------------------------------------------------------ memory accounting
+def kv_row_bytes(cfg) -> int:
+    """Bytes of attention-cache state per cache row per slot, summed over
+    the layers the paged layout covers (attn blocks without a SWA ring).
+    Used by benchmarks for the honest contiguous-vs-paged comparison:
+      contiguous bytes = num_slots * max_len * kv_row_bytes
+      paged bytes      = num_pages * page_size * kv_row_bytes
+    cfg is a ModelConfig (duck-typed; no model imports here)."""
+    if cfg.window is not None:
+        return 0
+    n_attn = sum(1 for kind in cfg.layer_types() if kind == "attn")
+    if n_attn == 0:                 # pure-SSM/recurrent: nothing to page
+        return 0
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    per_row = 2 * hk * hd * itemsize + 4                  # K + V + slot_pos
+    spt = cfg.spt
+    if spt.sparse_mha and hd % spt.pq_code_dim == 0:
+        per_row += hk * (hd // spt.pq_code_dim)           # int8 PQ codes
+    return n_attn * per_row

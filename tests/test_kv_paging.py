@@ -1,0 +1,275 @@
+"""Paged KV-cache subsystem tests (serving/kv_pages.py + engine wiring).
+
+Covers: allocator unit behavior (alloc/free/exhaustion/reuse), engine-level
+paged == contiguous greedy row-identity (default sparse-MHA jnp, dense,
+bucketed-padding, sparse decode *kernel* on/off, ragged prompts, EOS slot
+recycling), lazy in-loop page growth across page boundaries, the
+page-exhaustion admission stall, and the memory accounting helpers.  The
+wide (page_size x variant) sweep is `slow`; everything else runs in
+scripts/ci_fast.sh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.params import init_tree
+from repro.serving import kv_pages as kvp
+from repro.serving.engine import Engine, Request
+from repro.train.state import model_defs
+
+MAX_LEN, SLOTS, GEN, CHUNK, PS = 48, 3, 6, 4, 16
+
+
+def _tiny_cfg(**spt):
+    cfg = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256)
+    spt.setdefault("kv_page_size", PS)
+    return cfg.with_spt(ffn_capacity_factor=8.0, **spt)
+
+
+_params_cache = {}
+
+
+def _params(cfg):
+    key = (cfg.name, cfg.spt.sparse_mha, str(cfg.dtype))
+    if key not in _params_cache:
+        p = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+        if cfg.dtype == jnp.float32:
+            p = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.float32), p)
+        _params_cache[key] = p
+    return _params_cache[key]
+
+
+def _reqs(cfg, lens, gen=GEN, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, tokens=rng.integers(
+        0, cfg.vocab_size, size=ln, dtype=np.int32).tolist(),
+        max_new_tokens=gen) for i, ln in enumerate(lens)]
+
+
+def _run_both(cfg, reqs, eos_id=None, kv_pages=None, max_len=MAX_LEN,
+              slots=SLOTS):
+    params = _params(cfg)
+    eng_c = Engine(cfg, params, max_len=max_len, num_slots=slots,
+                   decode_chunk=CHUNK)
+    eng_p = Engine(cfg.with_spt(kv_layout="paged"), params, max_len=max_len,
+                   num_slots=slots, decode_chunk=CHUNK, kv_pages=kv_pages)
+    out_c = eng_c.run(reqs, eos_id=eos_id)
+    out_p = eng_p.run(reqs, eos_id=eos_id)
+    return out_c, out_p, eng_c, eng_p
+
+
+# --------------------------------------------------------------- allocator
+def test_allocator_alloc_free_exhaustion_reuse():
+    st = kvp.init_state(4)
+    st, pid, ok = kvp.alloc_masked(st, jnp.asarray([True, False, True, True]))
+    pid = np.asarray(pid)
+    assert np.asarray(ok).tolist() == [True, False, True, True]
+    assert pid[1] == -1 and len({pid[0], pid[2], pid[3]}) == 3
+    assert int(kvp.pages_in_use(st)) == 3
+    # exhaustion: 1 page left, 2 wanted -> second alloc fails cleanly
+    st, pid2, ok2 = kvp.alloc_masked(st, jnp.asarray([True, True]))
+    assert np.asarray(ok2).tolist() == [True, False]
+    assert int(np.asarray(pid2)[1]) == -1
+    assert int(kvp.pages_in_use(st)) == 4
+    # free + reuse: freed ids come back
+    pt = kvp.init_page_table(1, 4)
+    pt = pt.at[0, 0].set(int(np.asarray(pid2)[0]))
+    st, pt = kvp.free_slot_pages(st, pt, jnp.int32(0))
+    assert int(kvp.pages_in_use(st)) == 3
+    assert np.asarray(pt[0]).tolist() == [-1, -1, -1, -1]
+    st, pid3, ok3 = kvp.alloc_masked(st, jnp.asarray([True]))
+    assert bool(np.asarray(ok3)[0])
+    assert int(np.asarray(pid3)[0]) == int(np.asarray(pid2)[0])  # recycled
+
+
+def test_alloc_slot_pages_partial_row():
+    st = kvp.init_state(8)
+    pt = kvp.init_page_table(2, 3)
+    st, pt = kvp.alloc_slot_pages(st, pt, jnp.int32(1), jnp.int32(2))
+    row = np.asarray(pt[1])
+    assert (row[:2] >= 0).all() and row[2] == -1 and row[0] != row[1]
+    assert np.asarray(pt[0]).tolist() == [-1, -1, -1]
+    assert int(kvp.pages_in_use(st)) == 2
+    # replacing a slot's row starts from a clean slate (recycling)
+    st, pt = kvp.free_slot_pages(st, pt, jnp.int32(1))
+    st, pt = kvp.alloc_slot_pages(st, pt, jnp.int32(1), jnp.int32(3))
+    assert (np.asarray(pt[1]) >= 0).all()
+    assert int(kvp.pages_in_use(st)) == 3
+
+
+def test_gather_scatter_round_trip():
+    pool = jnp.zeros((4, 2, PS, 8))                      # (P, Hk, ps, d)
+    pt = jnp.asarray([[2, 0], [3, -1]])                  # slot 1: 1 page
+    val = jnp.ones((2, 2, 8))
+    pool = kvp.scatter_row(pool, pt, jnp.asarray([0, PS + 1]), val, PS)
+    view = kvp.gather_pages(pool, pt)                    # (2, 2, 2*PS, 8)
+    assert view.shape == (2, 2, 2 * PS, 8)
+    assert float(view[0, :, 0].sum()) == 16.0            # slot 0 row 0
+    # slot 1 position PS+1 -> logical page 1 = unallocated -> dropped
+    assert float(view[1].sum()) == 0.0
+    occ = kvp.occupancy(pt, PS)
+    assert occ.shape == (2, 2 * PS)
+    assert bool(occ[0].all()) and not bool(occ[1, PS:].any())
+
+
+# ----------------------------------------------------------- engine parity
+def test_paged_matches_contiguous_with_recycling():
+    """Default SPT config (sparse-MHA jnp decode + routed FFN), ragged
+    exact-length prompts, more requests than slots (slot + page
+    recycling): greedy completions must be row-identical."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [16, 9, 23, 5, 12])
+    out_c, out_p, _, eng_p = _run_both(cfg, reqs)
+    assert [c.tokens for c in out_p] == [c.tokens for c in out_c]
+    assert [c.finish_reason for c in out_p] == \
+        [c.finish_reason for c in out_c]
+    s = eng_p.last_stats
+    assert s.page_size == PS and s.kv_pages_total == SLOTS * (MAX_LEN // PS)
+    assert 0 < s.kv_pages_peak <= s.kv_pages_total
+    assert len(eng_p._chunk_cache) == 1                  # still traces once
+
+
+def test_paged_matches_contiguous_dense_bucketed():
+    """SPT-off dense stack takes the bucketed right-padding prefill path;
+    the pad overhang scatters into -1 page ids (dropped) and must not
+    change outputs."""
+    cfg = dataclasses.replace(_tiny_cfg(), name="tiny-dense").with_spt(
+        sparse_mha=False, routed_ffn=False)
+    eng = Engine(cfg.with_spt(kv_layout="paged"), _params(cfg),
+                 max_len=MAX_LEN, num_slots=2, decode_chunk=CHUNK)
+    assert eng._pad_invariant() and eng._pad_len(9) == 16
+    reqs = _reqs(cfg, [5, 9, 11], gen=4, seed=6)
+    out_c, out_p, _, _ = _run_both(cfg, reqs, slots=2)
+    assert [c.tokens for c in out_p] == [c.tokens for c in out_c]
+
+
+def test_paged_bucketed_overhang_dropped():
+    """Bucketed padding can overshoot the allocated pages (len 17 pads to
+    32 but only ceil(17/8)=3 pages are allocated at ps=8): the overhang
+    scatters into -1 page ids and is dropped without corrupting the pool."""
+    cfg = dataclasses.replace(
+        _tiny_cfg(kv_page_size=8), name="tiny-dense8").with_spt(
+        sparse_mha=False, routed_ffn=False)
+    eng = Engine(cfg.with_spt(kv_layout="paged"), _params(cfg),
+                 max_len=MAX_LEN, num_slots=2, decode_chunk=CHUNK)
+    assert eng._pad_invariant() and eng._pad_len(17) == 32
+    reqs = _reqs(cfg, [17, 5], gen=4, seed=8)
+    out_c, out_p, _, _ = _run_both(cfg, reqs, slots=2)
+    assert [c.tokens for c in out_p] == [c.tokens for c in out_c]
+
+
+def test_paged_eos_recycling():
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [16, 16, 16, 16], seed=3)
+    free = [c.tokens for c in Engine(
+        cfg, _params(cfg), max_len=MAX_LEN, num_slots=SLOTS,
+        decode_chunk=CHUNK).run(reqs)]
+    eos = free[0][2]
+    out_c, out_p, _, eng_p = _run_both(cfg, reqs, eos_id=eos)
+    assert [c.tokens for c in out_p] == [c.tokens for c in out_c]
+    assert out_p[0].finish_reason == "eos"
+    assert eng_p.last_stats.completed == 4
+
+
+def test_page_exhaustion_admission_stall():
+    """A pool sized for one request at a time serializes admission: every
+    request still completes (row-identical), the engine reports stalls,
+    and the measured peak never exceeds the pool."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [16, 12, 16], seed=2)
+    ws = kvp.num_pages(16 + GEN - 1, PS)                 # largest request
+    out_c, out_p, _, eng_p = _run_both(cfg, reqs, kv_pages=ws)
+    assert [c.tokens for c in out_p] == [c.tokens for c in out_c]
+    s = eng_p.last_stats
+    assert s.admission_stalls > 0
+    assert 0 < s.kv_pages_peak <= ws
+    assert s.completed == 3
+
+
+def test_request_larger_than_pool_rejected():
+    cfg = _tiny_cfg().with_spt(kv_layout="paged")
+    eng = Engine(cfg, _params(_tiny_cfg()), max_len=MAX_LEN,
+                 num_slots=SLOTS, decode_chunk=CHUNK, kv_pages=1)
+    with pytest.raises(ValueError, match="KV pages"):
+        eng.run(_reqs(_tiny_cfg(), [32]))
+
+
+def test_lazy_page_growth_across_boundary():
+    """A generation that crosses a page boundary allocates its next page
+    inside the compiled while_loop (prompt 15 + first token fill page 0 of
+    ps=16; decode then pops page 1 in-loop)."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [15], gen=8, seed=4)
+    out_c, out_p, _, eng_p = _run_both(cfg, reqs, slots=1)
+    assert out_p[0].tokens == out_c[0].tokens
+    assert eng_p.last_stats.kv_pages_peak == 2           # grew by one page
+
+
+# ----------------------------------------------------- sparse decode kernel
+def test_paged_sparse_decode_kernel_on_off(monkeypatch):
+    """Paged greedy decode through the fused Pallas sparse-MHA decode
+    kernel (interpret off-TPU) == the jnp fallback == the kill switch,
+    and all three == the contiguous layout.  All-f32 keeps accumulation
+    order inside float noise (same rationale as test_sparse_decode)."""
+    base = dataclasses.replace(_tiny_cfg(), dtype=jnp.float32).with_spt(
+        routed_ffn=False)
+    reqs = _reqs(base, [9, 14], gen=3, seed=5)
+
+    def run(layout, impl, disable=False):
+        monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disable else "0")
+        cfg = base.with_spt(kv_layout=layout, decode_attn_impl=impl)
+        try:
+            eng = Engine(cfg, _params(base), max_len=32, num_slots=2,
+                         decode_chunk=CHUNK)
+            return [c.tokens for c in eng.run(reqs)]
+        finally:
+            monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
+
+    want = run("contiguous", "jnp")
+    assert run("paged", "jnp") == want
+    assert run("paged", "kernel") == want
+    assert run("paged", "kernel", disable=True) == want  # kill switch
+
+
+# --------------------------------------------------------- accounting/misc
+def test_kv_row_bytes_accounting():
+    sparse = _tiny_cfg()
+    dense = sparse.with_spt(sparse_mha=False)
+    rb_s, rb_d = kvp.kv_row_bytes(sparse), kvp.kv_row_bytes(dense)
+    # 2 layers x (K+V bf16 + slot_pos), + PQ codes only when sparse
+    assert rb_d == 2 * (2 * 2 * 16 * 2 + 4)
+    assert rb_s == rb_d + 2 * 2 * (16 // sparse.spt.pq_code_dim)
+    swa = dataclasses.replace(sparse, window=8)
+    assert kvp.kv_row_bytes(swa) == 0                    # rings aren't paged
+
+
+def test_paged_noop_for_windowed_and_recurrent():
+    """kv_layout="paged" on stacks with nothing to page (SWA ring bounds
+    every attention cache) silently keeps the contiguous engine."""
+    cfg = dataclasses.replace(_tiny_cfg(), window=8).with_spt(
+        kv_layout="paged")
+    eng = Engine(cfg, _params(_tiny_cfg()), max_len=MAX_LEN,
+                 num_slots=2, decode_chunk=CHUNK)
+    assert not eng._paged and eng.kv_pages == 0
+
+
+# ------------------------------------------------------------- wide sweep
+@pytest.mark.slow
+@pytest.mark.parametrize("ps", [8, 24])                  # 24 !| MAX_LEN
+@pytest.mark.parametrize("sparse", [False, True])
+def test_paged_parity_sweep(ps, sparse):
+    cfg = dataclasses.replace(
+        _tiny_cfg(kv_page_size=ps), dtype=jnp.float32,
+        name=f"tiny-sweep-{ps}-{sparse}")
+    if not sparse:
+        cfg = cfg.with_spt(sparse_mha=False)
+    reqs = _reqs(cfg, [16, 7, 21, 11], seed=7)
+    out_c, out_p, _, _ = _run_both(cfg, reqs)
+    assert [c.tokens for c in out_p] == [c.tokens for c in out_c]

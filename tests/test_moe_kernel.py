@@ -1,0 +1,136 @@
+"""MoE kernel reuse (ROADMAP PR-3 follow-on): models/moe.py lowers through
+the fused routed-FFN Pallas kernels — grouped (train/prefill, softmax
+top-k gates in place of the |logit| router) and block-gather decode — with
+the jnp capacity path as the differentiated reference and the
+REPRO_DISABLE_KERNELS kill switch honored.  Interpret mode on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dispatch
+from repro.core.params import init_tree
+from repro.models import moe
+from repro.serving.engine import Engine, Request
+from repro.train.state import model_defs
+
+
+def _cfg(**kw):
+    cfg = configs.get_smoke("grok-1-314b")
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    p = init_tree(moe.moe_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, p
+
+
+def test_moe_kernel_matches_reference(setup):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    yr, ar = moe.moe_apply(p, x, cfg, mode="train")
+    yk, ak = moe.moe_apply(p, x, cfg.with_spt(ffn_impl="pallas"),
+                           mode="train")
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(float(ak["lb_loss"]), float(ar["lb_loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(ak["dropped"]), float(ar["dropped"]),
+                               rtol=1e-6)
+    # inference skips the load-balance loss on both paths
+    _, ai = moe.moe_apply(p, x, cfg.with_spt(ffn_impl="pallas"),
+                          mode="prefill")
+    assert float(ai["lb_loss"]) == 0.0
+
+
+def test_moe_kernel_backward_matches_reference(setup):
+    """The custom VJP differentiates the jnp reference (identical routing
+    plan => identical function), so gradients agree to float noise."""
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model))
+
+    def loss(cfg_):
+        def f(pp):
+            y, aux = moe.moe_apply(pp, x, cfg_, mode="train")
+            return jnp.sum(y.astype(jnp.float32) ** 2) + aux["lb_loss"]
+        return jax.grad(f)(p)
+
+    gr = loss(cfg)
+    gk = loss(cfg.with_spt(ffn_impl="pallas"))
+    for a, b in zip(jax.tree_util.tree_leaves(gr),
+                    jax.tree_util.tree_leaves(gk)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_moe_decode_kernel_matches_grouped(setup):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 1, cfg.d_model))
+    ck = cfg.with_spt(ffn_impl="pallas")
+    assert dispatch.use_decode_ffn_kernel(ck)            # auto follows
+    yk, ak = moe.moe_apply(p, x, ck, mode="decode")
+    yr, _ = moe.moe_apply(p, x, cfg, mode="decode")
+    assert float(ak["lb_loss"]) == 0.0
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_moe_decode_builds_no_dispatch_buffer(setup):
+    """At (B, 1, d) the decode path must not materialize a (B, E, C, d)
+    capacity buffer — the expert ids index the weight blocks directly."""
+    cfg, p = setup
+    b, e = 4, cfg.num_experts
+    x = jnp.zeros((b, 1, cfg.d_model))
+    jaxpr = jax.make_jaxpr(lambda x: moe.moe_apply(
+        p, x, cfg.with_spt(ffn_impl="pallas"), mode="decode")[0])(x)
+    for eqn in jaxpr.jaxpr.eqns:
+        for v in eqn.outvars:
+            shape = getattr(v.aval, "shape", ())
+            assert not (len(shape) == 4 and shape[0] == b
+                        and shape[1] == e), \
+                f"dispatch-shaped intermediate {shape} in MoE decode"
+
+
+def test_moe_kill_switch(setup, monkeypatch):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, cfg.d_model))
+    ck = cfg.with_spt(ffn_impl="pallas")
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1")
+    jaxpr = jax.make_jaxpr(
+        lambda x: moe.moe_apply(p, x, ck, mode="train")[0])(x)
+    assert "pallas_call" not in str(jaxpr)
+    yd, _ = moe.moe_apply(p, x, ck, mode="train")
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
+    yr, _ = moe.moe_apply(p, x, cfg, mode="train")
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(yr))
+
+
+def test_moe_engine_greedy_kernel_on_vs_off():
+    """Engine-level greedy serving of the MoE smoke arch: prefill through
+    the fused grouped kernel, decode through the block-gather kernel,
+    completions identical to the jnp path (all-f32 so accumulation-order
+    noise cannot flip an argmax)."""
+    base = dataclasses.replace(_cfg(), dtype=jnp.float32).with_spt(
+        sparse_mha=False)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32),
+        init_tree(model_defs(base), jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(6)
+    reqs = [Request(uid=i, tokens=rng.integers(
+        0, base.vocab_size, size=ln).tolist(), max_new_tokens=3)
+        for i, ln in enumerate([7, 11])]
+
+    def run(impl):
+        eng = Engine(base.with_spt(ffn_impl=impl), params, max_len=24,
+                     num_slots=2, decode_chunk=4)
+        return [c.tokens for c in eng.run(reqs)]
+
+    assert run("pallas") == run("grouped")

@@ -176,6 +176,37 @@ def test_sliding_window_prompt_longer_than_window():
         assert out[i].tokens == ref[0], f"len={len(p)}"
 
 
+def test_per_request_sampling_in_chunk(tiny):
+    """Per-request temperature/top-k ride inside the compiled decode chunk:
+    top_k=1 sampling is argmax (matches greedy exactly), a temp<=0 request
+    in a sampled batch stays greedy, and a sampled request is reproducible
+    under the same key."""
+    cfg, params, eng = tiny
+    prompts = _prompts(cfg, [16, 16, 16], seed=9)
+    greedy = [c.tokens for c in eng.run(
+        [Request(uid=i, tokens=p, max_new_tokens=GEN)
+         for i, p in enumerate(prompts)])]
+    key = jax.random.PRNGKey(11)
+    reqs = [
+        Request(uid=0, tokens=prompts[0], max_new_tokens=GEN,
+                temperature=0.8, top_k=1),          # argmax sampling
+        Request(uid=1, tokens=prompts[1], max_new_tokens=GEN,
+                temperature=0.0),                   # greedy in mixed batch
+        Request(uid=2, tokens=prompts[2], max_new_tokens=GEN,
+                temperature=1.2, top_k=5),          # truly sampled
+    ]
+    out = eng.run(reqs, key=key)
+    assert out[0].tokens == greedy[0]
+    assert out[1].tokens == greedy[1]
+    assert len(out[2].tokens) == GEN
+    assert all(0 <= t < cfg.vocab_size for t in out[2].tokens)
+    again = eng.run(reqs, key=key)
+    assert [c.tokens for c in again] == [c.tokens for c in out]
+    # different key moves the sampled request (overwhelmingly likely)
+    moved = eng.run(reqs, key=jax.random.PRNGKey(12))
+    assert moved[0].tokens == greedy[0]
+
+
 @pytest.mark.slow
 def test_recurrent_arch_exact_length_prefill():
     """Non-attention stacks can't right-pad prompts (state corruption);
