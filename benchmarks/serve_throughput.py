@@ -10,6 +10,11 @@ Reports, per configuration:
   decode_tok_s    — generated tokens / sum of block_until_ready'd decode
                     chunks (the continuous-batching steady state)
 
+``--variants prefill-overlap`` runs the disaggregated-scheduler comparison
+(serial batch-1 admission vs batched ragged prefill vs prefill/decode
+overlap) on a bursty mixed-length workload and writes BENCH_serve.json
+with time-to-first-token and tokens/s per mode.
+
 ``--paging`` additionally runs the honest KV-memory comparison at long
 max_len (contiguous strip vs paged pool at equal slot counts, measured
 peak pages, and the concurrent-slot count each layout supports under the
@@ -56,24 +61,31 @@ def _variant_cfg(cfg, variant: str):
 def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
           decode_chunk: int, ragged: bool, variant: str = "sparse",
           max_len: int = 0, kv_layout: str = "contiguous",
-          page_size: int = 128, kv_pages=None) -> dict:
+          page_size: int = 128, kv_pages=None, prefill_batch=None,
+          prefill_decode_ratio: float = 0.0, trials: int = 1) -> dict:
     cfg = _variant_cfg(configs.get_smoke(arch), variant)
     cfg = cfg.with_spt(kv_layout=kv_layout, kv_page_size=page_size)
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     max_len = max_len or prompt_len + gen + 8
     engine = Engine(cfg, params, max_len=max_len,
                     num_slots=slots, decode_chunk=decode_chunk,
-                    kv_pages=kv_pages)
+                    kv_pages=kv_pages, prefill_batch=prefill_batch,
+                    prefill_decode_ratio=prefill_decode_ratio)
     reqs = build_requests(cfg, requests, prompt_len, gen, ragged)
 
     t0 = time.perf_counter()
     engine.run(reqs)
     first_wall = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    engine.run(reqs)
-    steady_wall = time.perf_counter() - t0
-    s = engine.last_stats
+    # best of `trials` steady runs (host scheduling noise dominates the
+    # tiny CPU stand-in shapes; min is the standard microbenchmark choice)
+    steady_wall, s = float("inf"), None
+    for _ in range(max(1, trials)):
+        t0 = time.perf_counter()
+        engine.run(reqs)
+        wall = time.perf_counter() - t0
+        if wall < steady_wall:
+            steady_wall, s = wall, engine.last_stats
     row_b = kvp.kv_row_bytes(cfg)
     row = {
         "arch": cfg.name, "variant": variant, "requests": requests,
@@ -85,6 +97,10 @@ def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
         "decode_tok_s": round(s.decode_tok_s, 1),
         "decode_steps": s.decode_steps,
         "decode_tokens": s.decode_tokens,
+        "ttft_avg_s": round(s.ttft_avg_s, 4),
+        "ttft_max_s": round(s.ttft_s_max, 4),
+        "prefill_batches": s.prefill_batches,
+        "prefill_batch_occupancy": round(s.prefill_batch_occupancy, 2),
         "kv_layout": kv_layout,
     }
     if kv_layout == "paged":
@@ -148,6 +164,49 @@ def paging_report(args) -> dict:
     return report
 
 
+def prefill_overlap_report(args) -> dict:
+    """Serial vs batched vs overlapped admission under a bursty
+    mixed-length workload (all requests arrive at t=0, ragged prompt
+    lengths in [L/2, L], more requests than slots): time-to-first-token
+    and steady-state tokens/s per scheduler mode.  CPU stand-in per the
+    repo convention — compare across PRs, not against TPU; the batched
+    win comes from one prefill call + one cache scatter + one host sync
+    per admission group instead of one of each per request."""
+    kw = dict(requests=args.requests, slots=args.slots,
+              prompt_len=args.prompt_len, gen=args.gen,
+              decode_chunk=args.decode_chunk, ragged=True,
+              variant="sparse", kv_layout=args.kv_layout,
+              page_size=args.page_size, kv_pages=args.kv_pages,
+              trials=5)
+    modes = {
+        "serial": dict(prefill_batch=1),
+        "batched": dict(prefill_batch=args.slots),
+        "overlapped": dict(prefill_batch=args.slots,
+                           prefill_decode_ratio=args.prefill_decode_ratio),
+    }
+    rows = {name: bench(args.arch, **kw, **mk) for name, mk in modes.items()}
+    serial = rows["serial"]
+    report = {
+        "note": scale_note(),
+        "config": {"arch": args.arch, "slots": args.slots,
+                   "requests": args.requests, "prompt_len": args.prompt_len,
+                   "gen": args.gen, "decode_chunk": args.decode_chunk,
+                   "prefill_decode_ratio": args.prefill_decode_ratio,
+                   "workload": "bursty ragged [L/2, L], all at t=0"},
+        **rows,
+        "ttft_avg_speedup_vs_serial": {
+            name: round(serial["ttft_avg_s"] / max(r["ttft_avg_s"], 1e-9), 2)
+            for name, r in rows.items() if name != "serial"},
+        "decode_tok_s_ratio_vs_serial": {
+            name: round(r["decode_tok_s"]
+                        / max(serial["decode_tok_s"], 1e-9), 2)
+            for name, r in rows.items() if name != "serial"},
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -159,7 +218,12 @@ def main():
     ap.add_argument("--variants", default="dense,sparse",
                     help="comma list of dense|sparse|sparse-kernel|ffn|"
                          "ffn-kernel (*-kernel = fused Pallas paths; "
-                         "interpret mode off-TPU, so opt-in)")
+                         "interpret mode off-TPU, so opt-in) or "
+                         "prefill-overlap (serial vs batched vs overlapped "
+                         "admission -> BENCH_serve.json)")
+    ap.add_argument("--prefill-decode-ratio", type=float, default=4.0,
+                    help="overlap knob for the prefill-overlap variant's "
+                         "'overlapped' mode")
     ap.add_argument("--kv-layout", default="contiguous",
                     choices=("contiguous", "paged"))
     ap.add_argument("--page-size", type=int, default=128)
@@ -177,6 +241,9 @@ def main():
 
     print(json.dumps({"note": scale_note()}))
     for variant in args.variants.split(","):
+        if variant.strip() == "prefill-overlap":
+            print(json.dumps(prefill_overlap_report(args), indent=1))
+            continue
         for ragged in (False, True):
             row = bench(args.arch, args.requests, args.slots,
                         args.prompt_len, args.gen, args.decode_chunk,

@@ -10,7 +10,13 @@
 # the MoE reuse of those kernels.  The paged-KV-cache suite
 # (tests/test_kv_paging.py: allocator units + engine-level paged ==
 # contiguous row-identity incl. the sparse decode kernel) is fast except
-# the wide (page_size x variant) sweep, which is `slow`.  The tier-1
+# the wide (page_size x variant) sweep, which is `slow`.  The
+# disaggregated-prefill suite (tests/test_prefill_scheduler.py: batched
+# ragged prefill == serial batch-1 row-identity across layout x sparse
+# kernel variants, overlap loop, non-HOL partial admission, top-p
+# nucleus sampling incl. the replayed-membership check, LM + enc-dec
+# model-level ragged exactness, batched page-wise scatter) is fast
+# except its (layout x sparsity) sweep, which is `slow`.  The tier-1
 # command stays the full suite:
 #   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail

@@ -55,16 +55,39 @@ def capacity(tokens_per_seq: int, num_groups: int, topk: int,
     return min(c, max(pad, -(-tokens_per_seq * topk // pad) * pad))
 
 
+def capacity_dyn(tokens_per_seq: jax.Array, num_groups: int, topk: int,
+                 capacity_factor: float, pad: int = 8) -> jax.Array:
+    """Traced counterpart of ``capacity`` for per-row lengths (B,) int32 —
+    batched ragged prefill needs each row's capacity to match what a
+    batch-1 exact-length call would have used.  Bit-identical to the host
+    formula whenever ``capacity_factor`` is exactly representable in
+    float32 (true for every dyadic factor in the repo's configs)."""
+    pad = max(8, pad)
+    t = jnp.asarray(tokens_per_seq, jnp.int32)
+    c = (t.astype(jnp.float32) * topk * capacity_factor
+         / num_groups).astype(jnp.int32) + 1
+    c = -(-c // pad) * pad
+    return jnp.minimum(c, jnp.maximum(pad, -(-t * topk // pad) * pad))
+
+
 def make_plan(choice: jax.Array, gate: jax.Array, num_groups: int,
-              cap: int) -> DispatchPlan:
-    """choice: (B, S, K) int32; gate: (B, S, K) f32."""
+              cap: int, cap_dyn: Optional[jax.Array] = None) -> DispatchPlan:
+    """choice: (B, S, K) int32; gate: (B, S, K) f32.
+
+    cap_dyn: optional per-row (B,) capacities (<= cap) — ragged prefill
+    rows right-padded to a common S keep the capacity their exact length
+    would have had, so drops match the batch-1 serial engine row-for-row
+    (pad tokens sit after the real ones in position order, so real-token
+    ranks are unaffected either way)."""
     b, s, k = choice.shape
     flat_choice = choice.reshape(b, s * k)
     flat_gate = gate.reshape(b, s * k)
     oh = jax.nn.one_hot(flat_choice, num_groups, dtype=jnp.int32)  # (B,SK,G)
     ranks = jnp.cumsum(oh, axis=1) - oh                  # exclusive, per seq
     rank = jnp.sum(ranks * oh, axis=-1)                  # (B, SK)
-    keep = rank < cap
+    limit = cap if cap_dyn is None else jnp.minimum(
+        jnp.asarray(cap_dyn, jnp.int32), cap)[:, None]
+    keep = rank < limit
     dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
     token_id = jnp.broadcast_to(
         jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :], (b, s * k))

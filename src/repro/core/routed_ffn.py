@@ -170,12 +170,22 @@ def _dense_forward(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
 
 def _grouped_forward(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
                      lora_cfg: lora.LoRAConfig, choice: jax.Array,
-                     gate_w: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """BSpMV analogue: batch tokens per activated block, dense GEMM/block."""
+                     gate_w: jax.Array,
+                     seq_lengths: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """BSpMV analogue: batch tokens per activated block, dense GEMM/block.
+
+    seq_lengths: optional per-row real lengths (B,) — ragged prefill rows
+    right-padded to S keep the capacity of their exact length (see
+    dispatch.make_plan)."""
     b, s, d = x.shape
     cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
                             cfg.capacity_factor, pad=cfg.capacity_pad)
-    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
+    cap_dyn = None if seq_lengths is None else dispatch.capacity_dyn(
+        seq_lengths, cfg.num_groups, cfg.active_groups,
+        cfg.capacity_factor, pad=cfg.capacity_pad)
+    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap,
+                              cap_dyn=cap_dyn)
     xg = dispatch.gather(x, plan)                        # (B, G, C, d)
     xg = shard(xg, "batch", None, None, None)
 
@@ -207,11 +217,15 @@ def _grouped_forward(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
 
 def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
                lora_cfg: lora.LoRAConfig, impl: str = "grouped",
-               need_aux: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+               need_aux: bool = True,
+               seq_lengths: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Apply the routed FFN. x: (B, S, d) (2D inputs get a batch dim).
 
     ``need_aux=False`` (inference) skips the router softmax and the
-    load-balance loss; aux["lb_loss"] is then zero."""
+    load-balance loss; aux["lb_loss"] is then zero.
+    ``seq_lengths`` (B,) gives ragged prefill rows their exact-length
+    dispatch capacity (the dense oracle is per-token and needs none)."""
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]
@@ -227,7 +241,8 @@ def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
         hidden_mask = jnp.repeat(group_mask, cfg.group_dim, axis=-1)
         y = _dense_forward(x, p, cfg, lora_cfg, hidden_mask)
     elif impl == "grouped":
-        y, dropped = _grouped_forward(x, p, cfg, lora_cfg, choice, gate_w)
+        y, dropped = _grouped_forward(x, p, cfg, lora_cfg, choice, gate_w,
+                                      seq_lengths=seq_lengths)
         aux["dropped"] = dropped
     else:
         raise ValueError(f"unknown impl {impl!r}")

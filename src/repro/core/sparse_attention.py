@@ -52,6 +52,23 @@ def top_l(seq_len: int, cfg: SparseAttentionConfig,
     return min(l, horizon)
 
 
+def top_l_dyn(horizon: jax.Array, cfg: SparseAttentionConfig,
+              window: Optional[int] = None) -> jax.Array:
+    """Traced counterpart of ``top_l`` for per-row lengths (B,) int32 —
+    batched ragged prefill gives every row the selection budget its exact
+    length would have had.  Matches the host formula bit-for-bit when
+    ``top_fraction`` is exactly representable in float32 (jnp.round and
+    Python round are both half-to-even); every config in the repo uses
+    dyadic fractions."""
+    h = jnp.asarray(horizon, jnp.int32)
+    if window is not None:
+        h = jnp.minimum(h, window)
+    l = jnp.maximum(cfg.min_l, jnp.round(
+        h.astype(jnp.float32) * cfg.top_fraction).astype(jnp.int32))
+    l = -(-l // cfg.pad_l_to) * cfg.pad_l_to
+    return jnp.minimum(l, h)
+
+
 def _combined_score(scores: jax.Array, key_pos: jax.Array,
                     mask: jax.Array, nk: int) -> jax.Array:
     """Fold the tie-break into one sortable f32: score*nk + key_index.
@@ -76,7 +93,8 @@ def select_topl(scores: jax.Array, l: int, mask: jax.Array
 
 
 def bucket_select(scores: jax.Array, valid: jax.Array, l: int,
-                  max_score: int) -> Tuple[jax.Array, jax.Array]:
+                  max_score: int, l_dyn: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
     """Sort-free top-L: the paper's bucket-sort (Algorithm 3) in vector form.
 
     scores: (..., nk) integer-valued in [0, max_score]; valid: (..., nk).
@@ -88,18 +106,23 @@ def bucket_select(scores: jax.Array, valid: jax.Array, l: int,
     lowers to a sort that forces an all-gather of the (.., nq, nk) score
     tensor (measured: 17 GB/device at grok scale), while this form is
     histograms + cumsums, all elementwise along the key axis.
+
+    l_dyn: optional traced budgets broadcastable to scores.shape[:-1]
+    (e.g. (B, 1, 1) per-row budgets for ragged prefill); must be <= l,
+    which stays the static output width.
     Returns (idx (..., L) int32 ascending, sel_valid (..., L) bool).
     """
     s = jnp.where(valid, scores.astype(jnp.int32), -1)
     nk = s.shape[-1]
+    budget = jnp.asarray(l if l_dyn is None else l_dyn, jnp.int32)
     counts = jnp.stack([jnp.sum((s == v).astype(jnp.int32), axis=-1)
                         for v in range(max_score + 1)], axis=-1)
     ge = jnp.cumsum(counts[..., ::-1], axis=-1)[..., ::-1]  # #(s >= v)
-    meets = (ge >= l).astype(jnp.int32)          # monotone non-increasing in v
+    meets = (ge >= budget[..., None]).astype(jnp.int32)  # non-increasing in v
     t = jnp.maximum(jnp.sum(meets, axis=-1) - 1, 0)         # threshold bucket
     ge_pad = jnp.concatenate([ge, jnp.zeros_like(ge[..., :1])], axis=-1)
     n_above = jnp.take_along_axis(ge_pad, (t + 1)[..., None], axis=-1)[..., 0]
-    need_at_t = l - n_above
+    need_at_t = budget - n_above
     above = s > t[..., None]
     at_t = s == t[..., None]
     rev_rank = jnp.cumsum(at_t[..., ::-1].astype(jnp.int32),
@@ -180,12 +203,20 @@ def sparse_mha(q: jax.Array, k: jax.Array, v: jax.Array,
                codebooks: jax.Array, cfg: SparseAttentionConfig,
                scale: float, causal: bool = True,
                window: Optional[int] = None,
-               q_offset: int = 0
+               q_offset: int = 0,
+               seq_lengths: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full Algorithm 1 for a (possibly GQA) attention layer, training form.
 
     q: (B, Hq, nq, d); k, v: (B, Hk, nk, d).  q_offset is the absolute
     position of q[..., 0, :] (for decode/prefill continuation).
+
+    seq_lengths: optional per-row real lengths (B,) int32 for batched
+    ragged prefill — each row's top-L budget is top_l(seq_lengths[b])
+    instead of top_l(nk), so a right-padded row selects exactly the set
+    its exact-length batch-1 prefill would (the causal mask already hides
+    the pad keys from every real query).  The static gather width stays
+    top_l(nk) >= every per-row budget.
 
     Selection, gather, and attention all happen inside one query-chunk loop
     so the live gather buffer is (B, H, chunk, L, d) — the O(n L d) memory
@@ -197,6 +228,8 @@ def sparse_mha(q: jax.Array, k: jax.Array, v: jax.Array,
     _, hk, nk, _ = k.shape
     r = hq // hk
     l = top_l(nk, cfg, window)
+    l_dyn = (None if seq_lengths is None
+             else top_l_dyn(seq_lengths, cfg, window).reshape(b, 1, 1))
     codes_q = pq.assign(q, codebooks)                    # (B, Hq, nq, M)
     codes_k = pq.assign(k, codebooks)                    # (B, Hk, nk, M)
     k_pos = jnp.arange(nk, dtype=jnp.int32)
@@ -222,7 +255,7 @@ def sparse_mha(q: jax.Array, k: jax.Array, v: jax.Array,
             s = shard(s, "batch", "heads", None, None)
         max_s = cfg.pq.num_books * (r if cfg.select_granularity == "kvgroup"
                                     else 1)
-        idx, vld = bucket_select(s, mask[None, None], l, max_s)
+        idx, vld = bucket_select(s, mask[None, None], l, max_s, l_dyn=l_dyn)
         if cfg.select_granularity == "kvgroup":
             idx = jnp.repeat(idx, r, axis=1)             # broadcast to q heads
             vld = jnp.repeat(vld, r, axis=1)

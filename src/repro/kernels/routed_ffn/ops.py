@@ -40,12 +40,17 @@ def _lora_tree(p: dict, lora_cfg) -> Optional[dict]:
     return None
 
 
-def _forward(x, p, cfg: RoutedFFNConfig, lora_cfg, interpret, need_aux):
+def _forward(x, p, cfg: RoutedFFNConfig, lora_cfg, interpret, need_aux,
+             seq_lengths=None):
     b, s, d = x.shape
     choice, gate_w, probs = route(x, p["router"], cfg, need_aux=need_aux)
     cap = dispatch.capacity(s, cfg.num_groups, cfg.active_groups,
                             cfg.capacity_factor, pad=cfg.capacity_pad)
-    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap)
+    cap_dyn = None if seq_lengths is None else dispatch.capacity_dyn(
+        seq_lengths, cfg.num_groups, cfg.active_groups,
+        cfg.capacity_factor, pad=cfg.capacity_pad)
+    plan = dispatch.make_plan(choice, gate_w, cfg.num_groups, cap,
+                              cap_dyn=cap_dyn)
     y = grouped_ffn_kernel(
         x, plan.index, jax.lax.stop_gradient(p["w_inner"]),
         jax.lax.stop_gradient(p["w_outer"]),
@@ -87,13 +92,23 @@ _op.defvjp(_fwd, _bwd)
 
 def routed_ffn(x: jax.Array, p: dict, cfg: RoutedFFNConfig,
                lora_cfg: lora.LoRAConfig,
-               interpret: Optional[bool] = None, *, need_aux: bool = True
+               interpret: Optional[bool] = None, *, need_aux: bool = True,
+               seq_lengths: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Drop-in for core.routed_ffn.routed_ffn (impl="grouped" semantics)."""
+    """Drop-in for core.routed_ffn.routed_ffn (impl="grouped" semantics).
+
+    seq_lengths: per-row real lengths for batched ragged prefill (each row
+    keeps its exact-length dispatch capacity).  That path is serving-only,
+    so it bypasses the custom-VJP wrapper — differentiating a ragged
+    prefill raises instead of silently dropping the capacity override."""
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]
-    out, aux = _op(x, p, cfg, lora_cfg, interpret, need_aux)
+    if seq_lengths is not None:
+        out, aux = _forward(x, p, cfg, lora_cfg, interpret, need_aux,
+                            seq_lengths=seq_lengths)
+    else:
+        out, aux = _op(x, p, cfg, lora_cfg, interpret, need_aux)
     return (out[0] if squeeze else out), aux
 
 

@@ -26,7 +26,8 @@ from repro.train.state import model_defs
 
 
 def build_requests(cfg, num: int, prompt_len: int, gen: int,
-                   ragged: bool, seed: int = 1, top_k: int = 0):
+                   ragged: bool, seed: int = 1, top_k: int = 0,
+                   top_p: float = 0.0):
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(num):
@@ -39,7 +40,7 @@ def build_requests(cfg, num: int, prompt_len: int, gen: int,
                 (cfg.frontend_tokens, cfg.d_model)).astype(np.float32)
         reqs.append(Request(uid=i, tokens=toks.tolist(),
                             max_new_tokens=gen, frontend_embeds=fe,
-                            top_k=top_k))
+                            top_k=top_k, top_p=top_p))
     return reqs
 
 
@@ -92,6 +93,20 @@ def main() -> int:
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k sampling truncation inside the compiled "
                          "decode chunk (0 = off; needs --temperature > 0)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling inside the compiled decode chunk"
+                         " (keep the smallest probability mass >= p; 0 = "
+                         "off; needs --temperature > 0)")
+    ap.add_argument("--prefill-batch", type=int, default=None,
+                    help="max queued requests drained per batched ragged "
+                         "prefill call (default: --slots; 1 = the old "
+                         "serial batch-1 admission)")
+    ap.add_argument("--prefill-decode-ratio", type=float, default=0.0,
+                    help="overlap knob: with decodes in flight, admit at "
+                         "most ratio * decode_chunk * active_slots prompt "
+                         "tokens per scheduling iteration instead of "
+                         "pausing decode until every free slot is filled "
+                         "(0 = fill all free slots before each chunk)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -111,12 +126,15 @@ def main() -> int:
                         max_len=args.prompt_len + args.gen + 8,
                         num_slots=args.slots, eos_id=args.eos_id,
                         decode_chunk=args.decode_chunk,
-                        kv_pages=args.kv_pages)
+                        kv_pages=args.kv_pages,
+                        prefill_batch=args.prefill_batch,
+                        prefill_decode_ratio=args.prefill_decode_ratio)
         key = jax.random.PRNGKey(3) if args.temperature > 0 else None
         if cfg.family == "audio":
             return _serve_audio_legacy(cfg, engine, args, key)
         reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen,
-                              args.ragged, top_k=args.top_k)
+                              args.ragged, top_k=args.top_k,
+                              top_p=args.top_p)
 
         # warmup: absorbs tracing + compilation for every shape in the run
         t0 = time.perf_counter()

@@ -210,8 +210,15 @@ def kv_valid_mask(cache: dict, q_pos: jax.Array,
 
 def attend(p: dict, cfg: ModelConfig, q: jax.Array, k: jax.Array,
            v: jax.Array, causal: bool, window: Optional[int],
-           q_offset: int = 0) -> Tuple[jax.Array, dict]:
-    """Full-sequence attention (train/prefill), sparse or dense."""
+           q_offset: int = 0, seq_lengths: Optional[jax.Array] = None
+           ) -> Tuple[jax.Array, dict]:
+    """Full-sequence attention (train/prefill), sparse or dense.
+
+    seq_lengths: per-row real lengths (B,) for batched ragged prefill —
+    sparse MHA then selects with each row's exact-length top-L budget
+    (always via the jnp gather path; per-row budgets inside the fused
+    prefill kernel are a follow-on).  Dense attention needs nothing: the
+    causal mask already hides right-pad keys from every real query."""
     scale = cfg.resolved_head_dim ** -0.5
     aux: dict = {}
     if sparse_applicable(cfg):
@@ -219,7 +226,12 @@ def attend(p: dict, cfg: ModelConfig, q: jax.Array, k: jax.Array,
         impl = cfg.spt.attn_impl
         if impl == "pallas" and kdispatch.kernels_disabled():
             impl = "sparse_jnp"                  # REPRO_DISABLE_KERNELS=1
-        if impl == "pallas":
+        if seq_lengths is not None:
+            out, aux = sa.sparse_mha(q, k, v, p["pq"]["codebooks"], scfg,
+                                     scale, causal=causal, window=window,
+                                     q_offset=q_offset,
+                                     seq_lengths=seq_lengths)
+        elif impl == "pallas":
             from repro.kernels.sparse_attention import ops as sa_ops
             out, aux = sa_ops.sparse_mha(q, k, v, p["pq"]["codebooks"], scfg,
                                          scale, causal=causal, window=window,
@@ -246,12 +258,15 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                kv_x: Optional[jax.Array] = None,
                rope: bool = True,
                kv_valid: Optional[jax.Array] = None,
-               page_table: Optional[jax.Array] = None
+               page_table: Optional[jax.Array] = None,
+               seq_lengths: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Optional[dict], dict]:
     """Returns (y, new_cache, aux).  x: (B, S, d_model).
 
     pos: absolute position of x[:, 0] — a scalar when batches are aligned,
     or a (B,) vector when serving slots sit at ragged depths.
+    seq_lengths: train/prefill only — per-row real lengths (B,) of a
+    right-padded ragged batch (see ``attend``).
     kv_x: source for K/V (cross-attention); defaults to x.
     kv_valid: decode-mode only — a caller-tracked (B, cache_size) slot
     validity mask (the serving engine derives it once per step from slot
@@ -278,7 +293,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
     new_cache = cache
 
     if mode in ("train", "prefill"):
-        out, aux = attend(p, cfg, q, k, v, causal, window)
+        out, aux = attend(p, cfg, q, k, v, causal, window,
+                          seq_lengths=seq_lengths)
         if mode == "prefill":
             assert cache is not None
             new_cache = write_cache(cache, cfg, p, k, v, pos_k)

@@ -85,25 +85,29 @@ def encode(params: dict, cfg: ModelConfig, audio_embeds: jax.Array,
 
 # ------------------------------------------------------------- decoder
 def _dec_block(p: dict, x: jax.Array, cfg: ModelConfig, enc_out, *,
-               mode: str, cache=None, pos=None):
+               mode: str, cache=None, pos=None, seq_lengths=None):
     new_cache = dict(cache) if cache is not None else None
     h = layers.apply_norm(p["norm_self"], x, cfg.norm)
     y, self_c, _ = attention.attn_apply(
         p["self_attn"], h, cfg, mode=mode, causal=True,
-        cache=None if cache is None else cache["self"], pos=pos, rope=False)
+        cache=None if cache is None else cache["self"], pos=pos, rope=False,
+        seq_lengths=seq_lengths)
     x = x + y
     h = layers.apply_norm(p["norm_cross"], x, cfg.norm)
     if mode == "decode":
         y = _cross_decode(p["cross_attn"], h, cfg, cache["cross"])
         cross_c = cache["cross"]
     else:
+        # cross-attention keys are the encoder frames (all real); ragged
+        # right-padding only pads *queries*, whose outputs are discarded
         y, _, _ = attention.attn_apply(p["cross_attn"], h, cfg, mode="train",
                                        causal=False, kv_x=enc_out, rope=False)
         cross_c = (_build_cross_cache(p["cross_attn"], cfg, enc_out)
                    if mode == "prefill" else None)
     x = x + y
     h = layers.apply_norm(p["norm_ffn"], x, cfg.norm)
-    y, aux = ffn.ffn_apply(p["ffn"], h, cfg, mode=mode)
+    y, aux = ffn.ffn_apply(p["ffn"], h, cfg, mode=mode,
+                           seq_lengths=seq_lengths)
     x = x + y
     if new_cache is not None:
         new_cache = {"self": self_c, "cross": cross_c}
@@ -143,12 +147,13 @@ def _cross_decode(p: dict, x: jax.Array, cfg: ModelConfig,
 
 
 def _decode_stack(params: dict, cfg: ModelConfig, x: jax.Array, enc_out, *,
-                  mode: str, caches=None, pos=None, remat: bool = True):
+                  mode: str, caches=None, pos=None, remat: bool = True,
+                  seq_lengths=None):
     def body(h, xs):
         p = xs["params"]
         c = xs.get("cache")
         h, nc, aux = _dec_block(p, h, cfg, enc_out, mode=mode, cache=c,
-                                pos=pos)
+                                pos=pos, seq_lengths=seq_lengths)
         ys: Dict[str, Any] = {"aux": aux}
         if c is not None:
             ys["cache"] = nc
@@ -232,6 +237,39 @@ def encdec_prefill(params: dict, cfg: ModelConfig,
     x = layers.apply_norm(params["dec_norm"], x[:, -1:], cfg.norm)
     from repro.models.transformer import logits_of
     return caches, logits_of(params, cfg, x)
+
+
+def encdec_prefill_ragged(params: dict, cfg: ModelConfig,
+                          batch: Dict[str, jax.Array], lengths: jax.Array,
+                          max_len: int) -> Tuple[Any, jax.Array]:
+    """Batched ragged prefill for the enc-dec family: (Bp, S) right-padded
+    decoder prompts with per-row real `lengths` (decoder tokens only; the
+    encoder frames are a separate, always-dense axis).  Row outputs are
+    exact vs. batch-1 encdec_prefill at exact length: the causal self-attn
+    mask hides pad keys, sparse self-attn gets per-row top-L budgets, the
+    routed FFN per-row capacities, and cross-attention only ever pads
+    *queries*.  Returns (caches, logits at each row's last real position);
+    self-cache slots past a row's length are invalidated."""
+    from repro.models.transformer import length_sensitive, logits_of
+    enc_out = encode(params, cfg, batch["frontend_embeds"], remat=False)
+    bsz = batch["tokens"].shape[0]
+    caches = init_dec_caches(cfg, bsz, max_len,
+                             batch["frontend_embeds"].shape[1])
+    x = _embed_dec(params, cfg, batch["tokens"], 0)
+    sl = lengths if length_sensitive(cfg) else None
+    x, caches, _ = _decode_stack(params, cfg, x, enc_out, mode="prefill",
+                                 caches=caches, pos=0, remat=False,
+                                 seq_lengths=sl)
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    x_last = jnp.take_along_axis(
+        x, idx[:, None, None].astype(jnp.int32), axis=1)      # (B, 1, d)
+    x_last = layers.apply_norm(params["dec_norm"], x_last, cfg.norm)
+    sp = caches["self"]["slot_pos"]                           # (n, B, size)
+    caches = dict(caches)
+    caches["self"] = dict(caches["self"])
+    caches["self"]["slot_pos"] = jnp.where(
+        sp >= lengths[None, :, None], jnp.int32(-1), sp)
+    return caches, logits_of(params, cfg, x_last)
 
 
 def encdec_decode_step(params: dict, cfg: ModelConfig, caches: Any,

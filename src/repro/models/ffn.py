@@ -57,8 +57,8 @@ def ffn_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
-def _routed_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str
-                  ) -> Tuple[jax.Array, dict]:
+def _routed_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str,
+                  seq_lengths=None) -> Tuple[jax.Array, dict]:
     lc = cfg.spt.lora
     rcfg = _routed_cfg(cfg)
     need_aux = mode == "train"
@@ -75,27 +75,31 @@ def _routed_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str
     if impl == "pallas":
         if dispatch.use_routed_ffn_kernel(cfg):
             from repro.kernels.routed_ffn import ops as rffn_ops
-            return rffn_ops.routed_ffn(x, p, rcfg, lc, need_aux=need_aux)
+            return rffn_ops.routed_ffn(x, p, rcfg, lc, need_aux=need_aux,
+                                       seq_lengths=seq_lengths)
         impl = "grouped"                       # REPRO_DISABLE_KERNELS=1
     if impl == "grouped_shmap":
         from repro.core import ffn_shmap
         from repro.sharding import current_rules
         rules = current_rules() or {}
         mesh = rules.get("__mesh__")
-        if x.ndim == 3 and ffn_shmap.applicable(
-                mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0]):
+        if (x.ndim == 3 and seq_lengths is None and ffn_shmap.applicable(
+                mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0])):
             return ffn_shmap.routed_ffn_shmap(x, p, rcfg, lc, mesh,
                                               need_aux=need_aux)
         impl = "grouped"
     return routed_ffn.routed_ffn(x, p, rcfg, lc, impl=impl,
-                                 need_aux=need_aux)
+                                 need_aux=need_aux, seq_lengths=seq_lengths)
 
 
-def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
-              ) -> Tuple[jax.Array, dict]:
+def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train",
+              seq_lengths=None) -> Tuple[jax.Array, dict]:
+    """seq_lengths: per-row real lengths (B,) for batched ragged prefill —
+    threads the exact-length dispatch capacity into the routed paths (the
+    dense FFN is per-token, so it ignores them)."""
     lc = cfg.spt.lora
     if routed_applicable(cfg):
-        return _routed_apply(p, x, cfg, mode)
+        return _routed_apply(p, x, cfg, mode, seq_lengths=seq_lengths)
     act = routed_ffn.ACTIVATIONS[cfg.activation]
     up = lora.linear(x, p["wi"], lc)
     up = shard(up, "batch", None, "ffn")

@@ -98,8 +98,17 @@ def _moe_lora_tree(p: dict) -> Optional[dict]:
     return t
 
 
-def _moe_reference(x: jax.Array, p: dict, cfg: ModelConfig, need_aux: bool
-                   ) -> Tuple[jax.Array, dict]:
+def _moe_cap_dyn(cfg: ModelConfig, seq_lengths):
+    if seq_lengths is None:
+        return None
+    return dispatch.capacity_dyn(seq_lengths, cfg.num_experts,
+                                 cfg.experts_per_token,
+                                 cfg.moe_capacity_factor,
+                                 pad=cfg.spt.dispatch_pad)
+
+
+def _moe_reference(x: jax.Array, p: dict, cfg: ModelConfig, need_aux: bool,
+                   seq_lengths=None) -> Tuple[jax.Array, dict]:
     """The jnp capacity-dispatch path (BSpMV analogue) — also the
     differentiated reference for the fused-kernel forward."""
     lc = cfg.spt.lora
@@ -109,7 +118,8 @@ def _moe_reference(x: jax.Array, p: dict, cfg: ModelConfig, need_aux: bool
     cap = dispatch.capacity(s, e, cfg.experts_per_token,
                             cfg.moe_capacity_factor,
                             pad=cfg.spt.dispatch_pad)
-    plan = dispatch.make_plan(choice, gate, e, cap)
+    plan = dispatch.make_plan(choice, gate, e, cap,
+                              cap_dyn=_moe_cap_dyn(cfg, seq_lengths))
     xg = dispatch.gather(x, plan)                        # (B, E, C, d)
     xg = shard(xg, "batch", None, None, None)
 
@@ -147,7 +157,8 @@ def _moe_reference(x: jax.Array, p: dict, cfg: ModelConfig, need_aux: bool
 
 # ------------------------------------------------- fused kernel paths
 def _moe_kernel_forward(x: jax.Array, p: dict, cfg: ModelConfig,
-                        need_aux: bool) -> Tuple[jax.Array, dict]:
+                        need_aux: bool, seq_lengths=None
+                        ) -> Tuple[jax.Array, dict]:
     """Route + plan in jnp, expert GEMMs in the fused grouped kernel (the
     token gather rides in-kernel via the scalar-prefetched plan index);
     the combine scatter-add stays jnp, mirroring kernels/routed_ffn/ops."""
@@ -159,7 +170,8 @@ def _moe_kernel_forward(x: jax.Array, p: dict, cfg: ModelConfig,
     cap = dispatch.capacity(s, e, cfg.experts_per_token,
                             cfg.moe_capacity_factor,
                             pad=cfg.spt.dispatch_pad)
-    plan = dispatch.make_plan(choice, gate, e, cap)
+    plan = dispatch.make_plan(choice, gate, e, cap,
+                              cap_dyn=_moe_cap_dyn(cfg, seq_lengths))
     y = grouped_ffn_kernel(
         x, plan.index, sg(p["wi"]), sg(p["wo"]),
         sg(p["wg"]) if cfg.gated_ffn else None,
@@ -214,13 +226,17 @@ def _moe_decode_kernel(x: jax.Array, p: dict, cfg: ModelConfig
     return y.astype(x.dtype)[:, None], aux
 
 
-def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
-              ) -> Tuple[jax.Array, dict]:
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train",
+              seq_lengths=None) -> Tuple[jax.Array, dict]:
     """x: (B, S, d) -> (y, aux).  The router softmax stays (it feeds the
     top-k gates) but inference modes skip the load-balance loss.  With
     ``spt.ffn_impl="pallas"`` (and REPRO_DISABLE_KERNELS unset) the expert
     GEMMs lower through the fused routed-FFN kernels — decode-shaped
-    inputs skip the capacity plan entirely."""
+    inputs skip the capacity plan entirely.
+
+    seq_lengths: per-row real lengths (B,) for batched ragged prefill
+    (exact-length expert capacity per row).  Serving-only: the kernel path
+    then skips the custom-VJP wrapper."""
     need_aux = mode == "train"
     squeeze = x.ndim == 2
     if squeeze:
@@ -229,7 +245,12 @@ def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train"
             and dispatch.use_decode_ffn_kernel(cfg)):
         out, aux = _moe_decode_kernel(x, p, cfg)
     elif dispatch.use_routed_ffn_kernel(cfg):
-        out, aux = _moe_kernel_op(x, p, cfg, need_aux)
+        if seq_lengths is not None:
+            out, aux = _moe_kernel_forward(x, p, cfg, need_aux,
+                                           seq_lengths=seq_lengths)
+        else:
+            out, aux = _moe_kernel_op(x, p, cfg, need_aux)
     else:
-        out, aux = _moe_reference(x, p, cfg, need_aux)
+        out, aux = _moe_reference(x, p, cfg, need_aux,
+                                  seq_lengths=seq_lengths)
     return (out[0] if squeeze else out), aux

@@ -63,14 +63,15 @@ def block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
 
 def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 mode: str, cache=None, pos=None, kv_valid=None,
-                page_table=None
+                page_table=None, seq_lengths=None
                 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     h = layers.apply_norm(p["norm_mix"], x, cfg.norm)
     if kind == "attn":
         y, new_cache, a_aux = attention.attn_apply(
             p["mixer"], h, cfg, mode=mode, causal=True, window=cfg.window,
-            cache=cache, pos=pos, kv_valid=kv_valid, page_table=page_table)
+            cache=cache, pos=pos, kv_valid=kv_valid, page_table=page_table,
+            seq_lengths=seq_lengths)
     elif kind == "rec":
         y, new_cache, a_aux = rglru.rec_apply(
             p["mixer"], h, cfg, mode=mode, cache=cache)
@@ -88,9 +89,11 @@ def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
         # mode gates the FFN execution path (decode-shaped kernel at
         # (B, 1, d)) and the router aux (inference skips lb_loss)
         if cfg.num_experts > 0:
-            y2, f_aux = moe.moe_apply(p["ffn"], h2, cfg, mode=mode)
+            y2, f_aux = moe.moe_apply(p["ffn"], h2, cfg, mode=mode,
+                                      seq_lengths=seq_lengths)
         else:
-            y2, f_aux = ffn.ffn_apply(p["ffn"], h2, cfg, mode=mode)
+            y2, f_aux = ffn.ffn_apply(p["ffn"], h2, cfg, mode=mode,
+                                      seq_lengths=seq_lengths)
         x = x + y2.astype(x.dtype)
         for k in AUX_KEYS:
             if k in f_aux:
@@ -241,7 +244,7 @@ def _embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
                 caches=None, pos=None, remat: bool = True, kv_valid=None,
-                page_table=None
+                page_table=None, seq_lengths=None
                 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     aux_total = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
 
@@ -258,7 +261,8 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             c = None if unit_c is None else unit_c[name]
             h, nc, aux = block_apply(unit_p[name], h, cfg, kind, mode=mode,
                                      cache=c, pos=pos, kv_valid=kv_valid,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     seq_lengths=seq_lengths)
             new_caches[name] = nc
             for k in AUX_KEYS:
                 aux_u[k] = aux_u[k] + aux[k]
@@ -289,7 +293,8 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             x, nc, aux = block_apply(params["tail"][name], x, cfg, kind,
                                      mode=mode, cache=c, pos=pos,
                                      kv_valid=kv_valid,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     seq_lengths=seq_lengths)
             tail_caches[name] = nc
             for k in AUX_KEYS:
                 aux_total[k] = aux_total[k] + aux[k]
@@ -385,17 +390,34 @@ def _mask_invalid_slots(caches: dict, lengths: jax.Array) -> dict:
     return new
 
 
+def length_sensitive(cfg: ModelConfig) -> bool:
+    """Right-padding alone changes this config's real-token outputs unless
+    per-row lengths are threaded through the layers: sparse MHA's top-L
+    budget and routed-FFN / MoE dispatch capacity scale with the (static)
+    sequence length."""
+    return ((cfg.num_heads > 0 and attention.sparse_applicable(cfg))
+            or ffn.routed_applicable(cfg) or cfg.num_experts > 0)
+
+
 def lm_prefill_ragged(params: dict, cfg: ModelConfig,
                       batch: Dict[str, jax.Array], lengths: jax.Array,
                       max_len: int) -> Tuple[Any, jax.Array]:
-    """Prefill right-padded prompts of per-sequence `lengths` (total model
-    positions, i.e. including any frontend tokens).  Returns (caches,
-    logits at each sequence's last real position)."""
+    """Prefill a (B, S) batch of right-padded prompts of per-sequence
+    `lengths` (total model positions, i.e. including any frontend tokens).
+    Returns (caches, logits at each sequence's last real position).
+
+    Row outputs are exact — identical to prefilling each row alone at its
+    exact length: the causal mask hides pad keys from real queries, and
+    for length-sensitive configs the per-row lengths are threaded into
+    sparse-MHA selection budgets and routed-FFN/MoE dispatch capacities
+    (which routes sparse prefill through the jnp path; ragged budgets in
+    the fused prefill kernel are a follow-on)."""
     bsz = batch["tokens"].shape[0]
     caches = init_caches(cfg, bsz, max_len)
     x = _embed_inputs(params, cfg, batch)
+    sl = lengths if length_sensitive(cfg) else None
     x, caches, _ = _run_blocks(params, cfg, x, mode="prefill", caches=caches,
-                               pos=0, remat=False)
+                               pos=0, remat=False, seq_lengths=sl)
     idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
     x_last = jnp.take_along_axis(
         x, idx[:, None, None].astype(jnp.int32), axis=1)        # (B, 1, d)
@@ -404,24 +426,31 @@ def lm_prefill_ragged(params: dict, cfg: ModelConfig,
     return caches, logits_of(params, cfg, x_last)
 
 
-def write_slot_caches(dst: dict, row: dict, slot: jax.Array) -> dict:
-    """Scatter a batch-1 prefill cache `row` into batch index `slot` of the
-    engine cache `dst` — the whole row is replaced (KV, slot_pos, recurrent
-    states), which doubles as the slot's recycling reset."""
+def write_slot_caches_rows(dst: dict, rows: dict, slots: jax.Array) -> dict:
+    """Scatter every row of a (Bp, ...) prefill group's caches into its
+    engine slot in ONE call (the serial engine paid one host-synced jit
+    call per admission).  Each target row is replaced wholesale (KV,
+    slot_pos, recurrent states), which doubles as the slot's recycling
+    reset.  slots: (Bp,) int32; -1 marks a bucket-padding dummy row,
+    which routes out of bounds and is dropped."""
     def walk(d, r, lead):
         out = {}
         for name, v in d.items():
             if isinstance(v, dict):
                 out[name] = walk(v, r[name], lead)
             elif lead:                         # stacked units: (U, B, ...)
-                out[name] = v.at[:, slot].set(r[name][:, 0].astype(v.dtype))
+                dest = jnp.where(slots >= 0, slots, jnp.int32(v.shape[1]))
+                out[name] = v.at[:, dest].set(r[name].astype(v.dtype),
+                                              mode="drop")
             else:                              # tail blocks: (B, ...)
-                out[name] = v.at[slot].set(r[name][0].astype(v.dtype))
+                dest = jnp.where(slots >= 0, slots, jnp.int32(v.shape[0]))
+                out[name] = v.at[dest].set(r[name].astype(v.dtype),
+                                           mode="drop")
         return out
 
-    new = {"units": walk(dst["units"], row["units"], True)}
+    new = {"units": walk(dst["units"], rows["units"], True)}
     if "tail" in dst:
-        new["tail"] = walk(dst["tail"], row["tail"], False)
+        new["tail"] = walk(dst["tail"], rows["tail"], False)
     return new
 
 
@@ -438,20 +467,27 @@ def _map_blocks(caches: dict, fn) -> dict:
     return new
 
 
-def write_slot_caches_paged(dst: dict, row: dict, slot: jax.Array,
-                            page_table: jax.Array, cfg: ModelConfig) -> dict:
-    """Paged counterpart of write_slot_caches: the batch-1 prefill `row`
-    (always contiguous — prefill compute is layout-agnostic) is scattered
-    page-wise into the pool entries listed in ``page_table[slot]``.
-    Recurrent/SSM states and SWA ring caches keep the per-slot scatter.
-    Page rows past the slot's allocation (bucketed right-pad overhang with
-    -1 page ids) are dropped — decode overwrites them before any read."""
+def write_slot_caches_paged_rows(dst: dict, rows: dict, slots: jax.Array,
+                                 page_table: jax.Array,
+                                 cfg: ModelConfig) -> dict:
+    """Paged counterpart of write_slot_caches_rows: one page-wise scatter
+    covers every row of a prefill group (prefill rows are always
+    contiguous — prefill compute is layout-agnostic; the serial engine
+    paid one host-side jit call per admission).  Recurrent/SSM states and
+    SWA ring caches keep the per-slot scatter.  Page rows past a slot's
+    allocation (bucketed right-pad overhang with -1 page ids) are dropped
+    — decode overwrites them before any read.  slots: (Bp,) int32 slot
+    per row, -1 for bucket-padding dummy rows; their page rows become all
+    -1 ids, so every write drops.  Page ids are unique across slots, so
+    the batched scatter has no conflicting destinations."""
     from repro.serving import kv_pages
 
     ps = cfg.spt.kv_page_size
-    pt_row = page_table[slot]                             # (MP,)
+    ns = page_table.shape[0]
+    pt_rows = jnp.where(slots[:, None] >= 0,
+                        page_table[jnp.clip(slots, 0, ns - 1)],
+                        jnp.int32(-1))                    # (Bp, MP)
 
-    # walk dst and row in lockstep (same structure)
     def one(dst_tree, row_tree, lead):
         out = {}
         for bname, blk in dst_tree.items():
@@ -463,23 +499,28 @@ def write_slot_caches_paged(dst: dict, row: dict, slot: jax.Array,
                 r = rblk[name]
                 if paged:
                     pad = -1 if name == "slot_pos" else 0
-                    if lead:                   # (U, 1, ...) -> vmap over U
+                    if lead:                   # (U, ...) -> vmap over U
                         nb[name] = jax.vmap(
-                            lambda pool, seq: kv_pages.scatter_prefill(
-                                pool, pt_row, seq, ps, pad))(v, r[:, 0])
+                            lambda pool, seq: kv_pages.scatter_prefill_rows(
+                                pool, pt_rows, seq, ps, pad))(v, r)
                     else:
-                        nb[name] = kv_pages.scatter_prefill(
-                            v, pt_row, r[0], ps, pad)
+                        nb[name] = kv_pages.scatter_prefill_rows(
+                            v, pt_rows, r, ps, pad)
                 elif lead:
-                    nb[name] = v.at[:, slot].set(r[:, 0].astype(v.dtype))
+                    dest = jnp.where(slots >= 0, slots,
+                                     jnp.int32(v.shape[1]))
+                    nb[name] = v.at[:, dest].set(r.astype(v.dtype),
+                                                 mode="drop")
                 else:
-                    nb[name] = v.at[slot].set(r[0].astype(v.dtype))
+                    dest = jnp.where(slots >= 0, slots,
+                                     jnp.int32(v.shape[0]))
+                    nb[name] = v.at[dest].set(r.astype(v.dtype), mode="drop")
             out[bname] = nb
         return out
 
-    new = {"units": one(dst["units"], row["units"], True)}
+    new = {"units": one(dst["units"], rows["units"], True)}
     if "tail" in dst:
-        new["tail"] = one(dst["tail"], row["tail"], False)
+        new["tail"] = one(dst["tail"], rows["tail"], False)
     return new
 
 

@@ -9,10 +9,28 @@ The `Engine` runs **continuous batching** over a fixed number of decode
 slots (vLLM-style, in JAX):
 
   * requests queue up and are admitted into free slots as they open;
-  * each admission prefills the prompt alone (batch-1, right-padded to a
-    power-of-2 bucket for pure-attention stacks so retraces are bounded)
-    and scatters the resulting cache row into the slot — the scatter
-    replaces the whole row, which doubles as slot recycling;
+  * admission is **disaggregated and batched**: up to `prefill_batch`
+    queued requests drain through ONE batched ragged prefill call — rows
+    are right-padded to a joint (Bp, S) power-of-2 bucket (per-row lengths
+    are threaded into sparse-MHA top-L budgets and routed-FFN/MoE dispatch
+    capacities, so every row's output is identical to a batch-1
+    exact-length prefill) and ALL resulting cache rows scatter into their
+    slots in one jit call (one page allocation + one page-wise scatter in
+    the paged layout) instead of one host round-trip per admission; the
+    scatter replaces whole rows, which doubles as slot recycling.
+    Non-right-paddable stacks (recurrent/SSM states, SWA rings) batch
+    equal-length rows only;
+  * with `prefill_decode_ratio > 0` the scheduler **overlaps** admission
+    with decode: while decodes are in flight, each scheduling iteration
+    admits at most ratio * decode_chunk * active_slots prompt tokens
+    before running the next decode chunk, so a burst of arrivals no
+    longer pauses every in-flight generation until the queue drains;
+    `ServeStats` reports time-to-first-token and prefill-batch occupancy
+    so the overlap is measurable;
+  * admission never head-of-line-blocks on the page pool: a request whose
+    worst case does not fit is counted as a stall and skipped, while
+    later requests that do fit are admitted (the stalled one retries
+    every iteration);
   * decode runs in jit-compiled `lax.while_loop` chunks with per-slot
     positions, so the whole generation traces ONCE instead of per token;
     the loop exits a chunk early when every slot has finished;
@@ -31,9 +49,9 @@ slots (vLLM-style, in JAX):
     the while_loop carry), and retirement frees them — so short requests
     no longer pin max_len-sized strips and long-context max_len stops
     capping the slot count;
-  * per-request sampling (Request.temperature / Request.top_k) runs
-    inside the chunk via per-slot arrays; greedy decoding remains the
-    bit-identical default.
+  * per-request sampling (Request.temperature / top_k / top_p nucleus
+    truncation via a per-slot sorted cumsum) runs inside the chunk via
+    per-slot arrays; greedy decoding remains the bit-identical default.
 
 Timing is honest: prefill and decode are accumulated separately with
 `block_until_ready` at each boundary, and reported via `ServeStats` so
@@ -41,7 +59,6 @@ callers can separate compile/warmup (first run) from steady state.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -106,8 +123,11 @@ class Request:
     # per-request sampling (applied inside the compiled decode chunk):
     # temperature None = inherit run()'s temperature; <= 0 = greedy.
     # top_k 0 = no truncation; 1 = deterministic argmax sampling.
+    # top_p in (0, 1) keeps the smallest nucleus with that much probability
+    # mass (0 or >= 1 = off); composes with top_k (intersection).
     temperature: Optional[float] = None
     top_k: int = 0
+    top_p: float = 0.0
 
 
 @dataclasses.dataclass
@@ -128,6 +148,10 @@ class ServeStats:
     decode_steps: int = 0                  # batch-wide while_loop trips
     admitted: int = 0
     completed: int = 0
+    # disaggregated batched prefill
+    prefill_batches: int = 0               # batched prefill calls issued
+    ttft_s_sum: float = 0.0                # sum over admitted requests of
+    ttft_s_max: float = 0.0                # (first token ready - run start)
     # paged KV cache (zeros when kv_layout="contiguous")
     page_size: int = 0
     kv_pages_total: int = 0                # pool capacity in pages
@@ -142,6 +166,19 @@ class ServeStats:
     def decode_tok_s(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
+    @property
+    def ttft_avg_s(self) -> float:
+        """Mean time-to-first-token (the first token comes out of prefill,
+        so this is prefill latency + any queueing behind earlier groups)."""
+        return self.ttft_s_sum / self.admitted if self.admitted else 0.0
+
+    @property
+    def prefill_batch_occupancy(self) -> float:
+        """Mean admitted rows per batched prefill call (1.0 == the old
+        serial batch-1 admission)."""
+        return (self.admitted / self.prefill_batches
+                if self.prefill_batches else 0.0)
+
     def as_dict(self) -> Dict[str, float]:
         return {"prefill_s": round(self.prefill_s, 4),
                 "decode_s": round(self.decode_s, 4),
@@ -151,6 +188,11 @@ class ServeStats:
                 "prefill_tok_s": round(self.prefill_tok_s, 1),
                 "decode_tok_s": round(self.decode_tok_s, 1),
                 "admitted": self.admitted, "completed": self.completed,
+                "prefill_batches": self.prefill_batches,
+                "prefill_batch_occupancy": round(
+                    self.prefill_batch_occupancy, 2),
+                "ttft_avg_s": round(self.ttft_avg_s, 4),
+                "ttft_max_s": round(self.ttft_s_max, 4),
                 **({"page_size": self.page_size,
                     "kv_pages_total": self.kv_pages_total,
                     "kv_pages_peak": self.kv_pages_peak,
@@ -178,7 +220,9 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
                  jit: bool = True, *, num_slots: int = 8,
                  eos_id: Optional[int] = None, decode_chunk: int = 16,
-                 pad_id: int = 0, kv_pages: Optional[int] = None):
+                 pad_id: int = 0, kv_pages: Optional[int] = None,
+                 prefill_batch: Optional[int] = None,
+                 prefill_decode_ratio: float = 0.0):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -188,6 +232,19 @@ class Engine:
         self.pad_id = pad_id
         self.last_stats: Optional[ServeStats] = None
         self._use_jit = jit
+        # disaggregated prefill scheduler: up to prefill_batch queued
+        # requests drain through ONE batched ragged prefill call per
+        # admission group (prefill_batch=1 == the old serial admission).
+        # prefill_decode_ratio > 0 interleaves prefill micro-batches with
+        # decode chunks instead of filling every free slot first: per
+        # scheduling iteration at most ratio * decode_chunk * active_slots
+        # prompt tokens are admitted while decodes are in flight (always
+        # at least one request, so admission cannot starve); 0 = admit
+        # greedily into all free slots before each decode chunk.
+        self.prefill_batch = max(1, min(num_slots, num_slots
+                                        if prefill_batch is None
+                                        else prefill_batch))
+        self.prefill_decode_ratio = max(0.0, prefill_decode_ratio)
         # paged KV cache: pool of kv_pages fixed-size pages shared across
         # slots (cfg.spt.kv_layout="paged"); kv_pages=None defaults to the
         # contiguous footprint — pass a smaller pool to serve under a
@@ -210,50 +267,71 @@ class Engine:
         self._prefill_one: Optional[Callable] = None
         self._chunk_cache: Dict[Any, Callable] = {}
         if self._paged:
-            def _ws(caches, row, slot, page_table):
-                return transformer.write_slot_caches_paged(
-                    caches, row, slot, page_table, cfg)
-            self._write_slot = (jax.jit(_ws, donate_argnums=(0,))
+            def _ws(caches, rows, slots, page_table):
+                return transformer.write_slot_caches_paged_rows(
+                    caches, rows, slots, page_table, cfg)
+            self._write_rows = (jax.jit(_ws, donate_argnums=(0,))
                                 if jit else _ws)
-            self._alloc_slot = (
-                jax.jit(kvp.alloc_slot_pages, donate_argnums=(0, 1))
-                if jit else kvp.alloc_slot_pages)
+            self._alloc_rows = (
+                jax.jit(kvp.alloc_rows_pages, donate_argnums=(0, 1))
+                if jit else kvp.alloc_rows_pages)
             self._free_slot = (
                 jax.jit(kvp.free_slot_pages, donate_argnums=(0, 1))
                 if jit else kvp.free_slot_pages)
         else:
-            self._write_slot = (
-                jax.jit(transformer.write_slot_caches, donate_argnums=(0,))
-                if jit else transformer.write_slot_caches)
+            self._write_rows = (
+                jax.jit(transformer.write_slot_caches_rows,
+                        donate_argnums=(0,))
+                if jit else transformer.write_slot_caches_rows)
 
     # ------------------------------------------------------------ prefill
     def _pad_invariant(self) -> bool:
-        """True when right-padding provably cannot change real-token
-        outputs.  That requires: a pure-attention stack (padding corrupts
-        recurrent states), no sliding-window ring cache (padding displaces
-        real KV), dense attention (sparse MHA's top-L budget counts the
-        padded keys), and dense FFN (routed-FFN/MoE capacity dispatch lets
-        pad tokens compete with real ones for slots)."""
+        """True when right-padding alone (no per-row length threading)
+        provably cannot change real-token outputs.  That requires: a
+        pure-attention stack (padding corrupts recurrent states), no
+        sliding-window ring cache (padding displaces real KV), dense
+        attention (sparse MHA's top-L budget counts the padded keys), and
+        dense FFN (routed-FFN/MoE capacity dispatch lets pad tokens compete
+        with real ones for slots)."""
         cfg = self.cfg
         return (transformer.supports_ragged_prefill(cfg)
                 and cfg.window is None
-                and not attention.sparse_applicable(cfg)
-                and not ffn.routed_applicable(cfg)
-                and cfg.num_experts == 0)
+                and not transformer.length_sensitive(cfg))
+
+    def _ragged_batchable(self) -> bool:
+        """True when ragged rows may be right-padded to a common bucket:
+        pure-attention stacks without a SWA ring (padding would displace
+        real KV from the window-sized ring buffer).  Length-sensitive
+        configs (sparse MHA / routed FFN / MoE) stay exact because
+        lm_prefill_ragged threads the per-row lengths into selection
+        budgets and dispatch capacities.  Everything else (rec/ssd states)
+        batches equal-length rows only."""
+        return (transformer.supports_ragged_prefill(self.cfg)
+                and self.cfg.window is None)
 
     def _pad_len(self, n: int) -> int:
-        """Prompt-length bucket: pad-invariant configs pad right to a power
-        of two (cache slots past the real length are invalidated), bounding
-        jit retraces to O(log L); everything else prefills at exact length
-        so outputs stay identical to the per-token reference."""
+        """Prompt-length bucket: ragged-batchable configs pad right to a
+        power of two (cache slots past the real length are invalidated),
+        bounding jit retraces to O(log L); everything else prefills at
+        exact length so outputs stay identical to the per-token
+        reference."""
         n = max(1, n)
-        if not self._pad_invariant():
+        if not self._ragged_batchable():
             return n
         p = 8
         while p < n:
             p <<= 1
         frontend = self.cfg.frontend_tokens if self.cfg.frontend else 0
         return max(n, min(p, self.max_len - frontend))
+
+    @staticmethod
+    def _pad_rows(n: int) -> int:
+        """Row-count bucket (power of two), so the (Bp, S) prefill shapes
+        stay O(log Bp * log S) and retraces stay bounded."""
+        p = 1
+        while p < n:
+            p <<= 1
+        return p
 
     def _get_prefill(self) -> Callable:
         if self._prefill_one is None:
@@ -265,25 +343,36 @@ class Engine:
             self._prefill_one = jax.jit(fn) if self._use_jit else fn
         return self._prefill_one
 
-    def _prefill_request(self, r: Request):
-        """Batch-1 prefill of one request; returns (cache_row, logits)."""
+    def _prefill_group(self, group: Sequence[Request]):
+        """ONE batched ragged prefill over an admission group: rows are
+        right-padded to a joint (Bp, S) bucket (dummy rows fill the Bp
+        bucket; their results are discarded and their cache rows dropped
+        by the scatter).  Returns (cache_rows, logits (Bpb, 1, V), Bpb)."""
         cfg = self.cfg
-        p = self._pad_len(len(r.tokens))
-        toks = np.full((1, p), self.pad_id, np.int32)
-        toks[0, :len(r.tokens)] = np.asarray(r.tokens, np.int32)
         frontend = cfg.frontend_tokens if cfg.frontend else 0
+        p = self._pad_len(max(len(r.tokens) for r in group))
+        bpb = self._pad_rows(len(group))
+        toks = np.full((bpb, p), self.pad_id, np.int32)
+        lens = np.ones(bpb, np.int32)                  # dummies: length 1
+        for i, r in enumerate(group):
+            toks[i, :len(r.tokens)] = np.asarray(r.tokens, np.int32)
+            lens[i] = len(r.tokens)
         batch = {"tokens": jnp.asarray(toks)}
         if frontend:
-            fe = jnp.asarray(r.frontend_embeds).reshape(
-                1, frontend, cfg.d_model)
-            batch["frontend_embeds"] = fe
-        lengths = jnp.asarray([frontend + len(r.tokens)], jnp.int32)
-        return self._get_prefill()(self.params, batch, lengths)
+            fe = np.zeros((bpb, frontend, cfg.d_model), np.float32)
+            for i, r in enumerate(group):
+                fe[i] = np.asarray(r.frontend_embeds).reshape(
+                    frontend, cfg.d_model)
+            batch["frontend_embeds"] = jnp.asarray(fe)
+        lengths = jnp.asarray(frontend + lens, jnp.int32)
+        rows, logits = self._get_prefill()(self.params, batch, lengths)
+        return rows, logits, bpb
 
     # ------------------------------------------------------------- decode
     def _get_chunk(self, slots: int, max_gen: int, greedy: bool,
-                   eos_id: Optional[int]) -> Callable:
-        key = (slots, max_gen, greedy, eos_id)
+                   eos_id: Optional[int], use_topp: bool = False
+                   ) -> Callable:
+        key = (slots, max_gen, greedy, eos_id, use_topp)
         fn = self._chunk_cache.get(key)
         if fn is not None:
             return fn
@@ -293,26 +382,41 @@ class Engine:
         if paged:
             view = kvp.view_len(self.max_len, ps)
 
-        def sample_fn(keys, n, lg, temps, topks):
-            """Per-slot temperature + top-k sampling; slots with temp <= 0
-            fall back to argmax (mixed batches share one compiled chunk)."""
+        def sample_fn(keys, n, lg, temps, topks, topps):
+            """Per-slot temperature + top-k + top-p sampling; slots with
+            temp <= 0 fall back to argmax (mixed batches share one compiled
+            chunk).  Both truncations are computed on the temperature-
+            scaled logits and intersected.  The nucleus pass only compiles
+            in when some request in the run actually set top_p (use_topp is
+            static in the chunk cache key) — runs without it pay nothing."""
             kb = jax.vmap(jax.random.fold_in)(keys, n)
             vocab = lg.shape[-1]
 
-            def draw(k, l, tmp, tk):
+            def draw(k, l, tmp, tk, tp):
                 scaled = l / jnp.maximum(tmp, 1e-6)
                 srt = -jnp.sort(-scaled)                  # descending
-                thr = srt[jnp.clip(tk - 1, 0, vocab - 1)]
-                masked = jnp.where((tk > 0) & (scaled < thr),
+                thr_k = srt[jnp.clip(tk - 1, 0, vocab - 1)]
+                masked = jnp.where((tk > 0) & (scaled < thr_k),
                                    -jnp.inf, scaled)
+                if use_topp:
+                    # nucleus: smallest sorted prefix with mass >= tp (a
+                    # token is kept iff the mass strictly before it is
+                    # < tp, so the top-1 token always survives)
+                    probs = jax.nn.softmax(srt)
+                    cum = jnp.cumsum(probs)
+                    kcnt = jnp.clip(jnp.sum(((cum - probs) < tp)
+                                            .astype(jnp.int32)), 1, vocab)
+                    thr_p = srt[kcnt - 1]
+                    masked = jnp.where((tp > 0.0) & (tp < 1.0)
+                                       & (scaled < thr_p), -jnp.inf, masked)
                 return jax.random.categorical(k, masked).astype(jnp.int32)
 
-            sampled = jax.vmap(draw)(kb, lg, temps, topks)
+            sampled = jax.vmap(draw)(kb, lg, temps, topks, topps)
             return jnp.where(temps > 0.0, sampled,
                              jnp.argmax(lg, axis=-1).astype(jnp.int32))
 
         def chunk(params, caches, page_table, astate, tok, pos, active, n,
-                  limit, buf, keys, temps, topks):
+                  limit, buf, keys, temps, topks, topps):
             def cond(c):
                 return (c[0] < chunk_steps) & jnp.any(c[6])
 
@@ -353,7 +457,7 @@ class Engine:
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 else:
-                    nxt = sample_fn(keys, n, lg, temps, topks)
+                    nxt = sample_fn(keys, n, lg, temps, topks, topps)
                 bidx = jnp.arange(slots, dtype=jnp.int32)
                 col = jnp.clip(n, 0, max_gen - 1)
                 buf = buf.at[bidx, col].set(
@@ -434,7 +538,7 @@ class Engine:
         base_key = key if key is not None else jax.random.PRNGKey(0)
         max_gen = max((r.max_new_tokens for r in requests), default=1)
         stats = ServeStats(page_size=ps, kv_pages_total=self.kv_pages)
-        queue = collections.deque(requests)
+        queue: List[Request] = list(requests)
         completions: Dict[int, Completion] = {}
 
         caches = transformer.init_caches(
@@ -457,8 +561,12 @@ class Engine:
         keys = np.zeros((slots, 2), np.uint32)
         temps = np.zeros(slots, np.float32)
         topks = np.zeros(slots, np.int32)
+        topps = np.zeros(slots, np.float32)
         slot_req: List[Optional[Request]] = [None] * slots
-        chunk_fn = self._get_chunk(slots, max_gen, greedy, eos_id)
+        use_topp = sampling and any(0.0 < r.top_p < 1.0 for r in requests)
+        chunk_fn = self._get_chunk(slots, max_gen, greedy, eos_id, use_topp)
+        ragged_ok = self._ragged_batchable()
+        t_run0 = time.perf_counter()
 
         def retire(b: int):
             nonlocal astate, page_table, reserved
@@ -483,35 +591,95 @@ class Engine:
                 used = self.kv_pages - int(jax.device_get(astate["top"]))
                 stats.kv_pages_peak = max(stats.kv_pages_peak, used)
 
-        while queue or any(s is not None for s in slot_req):
-            # -------- admit queued requests into free slots (FIFO; a
-            # request that does not fit the page pool stalls the queue
-            # until retiring slots release their reservations)
-            while queue and any(s is None for s in slot_req):
-                r = queue[0]
-                if self._paged and pages_ws(r) > self.kv_pages - reserved:
-                    stats.admission_stalls += 1
+        def form_group(stalled_seen: set) -> List[Request]:
+            """Scan the queue IN ORDER for the next admission group: up to
+            prefill_batch requests that have a free slot and (paged) a
+            worst-case page reservation.  A request that does not fit the
+            page pool is counted as a stall (once per scheduling iteration
+            — `stalled_seen` dedups across the admission loop's passes)
+            and SKIPPED — it must not head-of-line-block later rows that
+            do fit; it is retried every iteration and admits once retiring
+            slots release their reservations.  Non-ragged-batchable stacks
+            (rec/ssd states, SWA rings) group equal-length rows only (no
+            right-padding).  With overlap enabled and decodes in flight,
+            the group is bounded by the prefill token budget (always >= 1
+            request, so admission cannot starve)."""
+            free = sum(1 for s in slot_req if s is None)
+            if not free or not queue:
+                return []
+            budget = None
+            if self.prefill_decode_ratio > 0 and active.any():
+                budget = max(1, int(self.prefill_decode_ratio
+                                    * self.decode_chunk
+                                    * int(active.sum())))
+            group: List[Request] = []
+            picked: List[int] = []
+            group_ws = group_tokens = 0
+            for qi, r in enumerate(queue):
+                if len(group) == min(free, self.prefill_batch):
                     break
-                queue.popleft()
-                b = next(i for i, s in enumerate(slot_req) if s is None)
-                t0 = time.perf_counter()
-                row, logits = self._prefill_request(r)
-                if self._paged:
+                if (budget is not None and group
+                        and group_tokens + len(r.tokens) > budget):
+                    break
+                if (not ragged_ok and group
+                        and len(r.tokens) != len(group[0].tokens)):
+                    continue
+                if (self._paged
+                        and pages_ws(r) > self.kv_pages - reserved
+                        - group_ws):
+                    if r.uid not in stalled_seen:
+                        stalled_seen.add(r.uid)
+                        stats.admission_stalls += 1
+                    continue
+                group.append(r)
+                picked.append(qi)
+                group_ws += pages_ws(r) if self._paged else 0
+                group_tokens += len(r.tokens)
+            for qi in reversed(picked):
+                del queue[qi]
+            return group
+
+        def admit(group: List[Request]):
+            """ONE batched prefill + ONE jit scatter (and, paged, ONE page
+            allocation) admits the whole group — the serial engine paid a
+            host round-trip per request."""
+            nonlocal caches, page_table, astate, reserved
+            t0 = time.perf_counter()
+            rows, logits, bpb = self._prefill_group(group)
+            slot_vec = np.full(bpb, -1, np.int32)   # -1 rows: dummies, drop
+            assigned: List[int] = []
+            for i, r in enumerate(group):
+                b = next(j for j, s in enumerate(slot_req) if s is None)
+                slot_req[b] = r
+                assigned.append(b)
+                slot_vec[i] = b
+            if self._paged:
+                npages = np.zeros(bpb, np.int32)
+                for i, r in enumerate(group):
                     reserved += pages_ws(r)
-                    slot_ws[b] = pages_ws(r)
-                    npg0 = kvp.num_pages(frontend + len(r.tokens), ps)
-                    astate, page_table = self._alloc_slot(
-                        astate, page_table, jnp.int32(b), jnp.int32(npg0))
-                    caches = self._write_slot(caches, row, jnp.int32(b),
-                                              page_table)
-                else:
-                    caches = self._write_slot(caches, row, jnp.int32(b))
-                logits = jax.block_until_ready(logits)
-                jax.block_until_ready(caches)
-                stats.prefill_s += time.perf_counter() - t0
-                stats.prefill_tokens += len(r.tokens)
-                stats.admitted += 1
-                lg = np.asarray(logits[0, -1], np.float32)
+                    slot_ws[assigned[i]] = pages_ws(r)
+                    npages[i] = kvp.num_pages(frontend + len(r.tokens), ps)
+                astate, page_table = self._alloc_rows(
+                    astate, page_table, jnp.asarray(slot_vec),
+                    jnp.asarray(npages))
+                caches = self._write_rows(caches, rows,
+                                          jnp.asarray(slot_vec), page_table)
+            else:
+                caches = self._write_rows(caches, rows,
+                                          jnp.asarray(slot_vec))
+            logits = jax.block_until_ready(logits)
+            jax.block_until_ready(caches)
+            now = time.perf_counter()
+            stats.prefill_s += now - t0
+            ttft = now - t_run0
+            stats.ttft_s_sum += ttft * len(group)
+            stats.ttft_s_max = max(stats.ttft_s_max, ttft)
+            stats.prefill_batches += 1
+            stats.prefill_tokens += sum(len(r.tokens) for r in group)
+            stats.admitted += len(group)
+            for i, r in enumerate(group):
+                b = assigned[i]
+                lg = np.asarray(logits[i, -1], np.float32)
                 skey = jax.random.fold_in(base_key, r.uid)
                 t_r = eff_temp[r.uid]
                 if greedy or t_r <= 0.0:
@@ -522,12 +690,21 @@ class Engine:
                         thr = np.sort(scaled)[::-1][
                             min(r.top_k, scaled.size) - 1]
                         scaled = np.where(scaled < thr, -np.inf, scaled)
+                    if 0.0 < r.top_p < 1.0:
+                        srt = np.sort(lg / max(t_r, 1e-6))[::-1]
+                        e = np.exp(srt - srt[0])
+                        probs = e / e.sum()
+                        cum = np.cumsum(probs)
+                        kcnt = max(1, int(((cum - probs)
+                                           < r.top_p).sum()))
+                        scaled = np.where(scaled < srt[kcnt - 1],
+                                          -np.inf, scaled)
                     first = int(jax.random.categorical(
                         jax.random.fold_in(skey, 0), jnp.asarray(scaled)))
-                slot_req[b] = r
                 keys[b] = np.asarray(skey, np.uint32)
                 temps[b] = t_r
                 topks[b] = r.top_k
+                topps[b] = r.top_p
                 tok[b] = first
                 pos[b] = frontend + len(r.tokens)
                 n_gen[b] = 1
@@ -539,6 +716,19 @@ class Engine:
                 active[b] = not done_now
                 if done_now:
                     retire(b)
+
+        while queue or any(s is not None for s in slot_req):
+            # -------- admission: batched-prefill groups, interleaved with
+            # decode chunks under the overlap budget instead of pausing
+            # decode until every free slot is filled
+            stalled_seen: set = set()
+            while True:
+                group = form_group(stalled_seen)
+                if not group:
+                    break
+                admit(group)
+                if self.prefill_decode_ratio > 0 and active.any():
+                    break       # overlap: hand control back to decode
             track_peak()
             if not active.any():
                 continue            # all admitted work finished; drain queue
@@ -549,7 +739,7 @@ class Engine:
                            jnp.asarray(active), jnp.asarray(n_gen),
                            jnp.asarray(limit), jnp.asarray(buf),
                            jnp.asarray(keys), jnp.asarray(temps),
-                           jnp.asarray(topks))
+                           jnp.asarray(topks), jnp.asarray(topps))
             out = jax.block_until_ready(out)
             (caches, page_table, astate, tok_d, pos_d, act_d, n_d, buf_d,
              steps) = out

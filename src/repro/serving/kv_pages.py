@@ -96,6 +96,23 @@ def alloc_slot_pages(state: AllocState, page_table: jax.Array,
     return state, page_table.at[slot].set(pid)
 
 
+def alloc_rows_pages(state: AllocState, page_table: jax.Array,
+                     slots: jax.Array, npages: jax.Array
+                     ) -> Tuple[AllocState, jax.Array]:
+    """Group admission: allocate the first ``npages[i]`` pages for each row
+    of a batched prefill in ONE call (slots (Bp,) int32, -1 = bucket-pad
+    dummy row -> nothing allocated, page-table write dropped).  Each real
+    slot's page-table row is replaced wholesale (clean recycle), exactly
+    like alloc_slot_pages does for one slot."""
+    mp = page_table.shape[1]
+    npages = jnp.asarray(npages, jnp.int32)
+    want = ((jnp.arange(mp, dtype=jnp.int32)[None, :] < npages[:, None])
+            & (slots >= 0)[:, None])                      # (Bp, MP)
+    state, pid, _ = alloc_masked(state, want)
+    dest = jnp.where(slots >= 0, slots, jnp.int32(page_table.shape[0]))
+    return state, page_table.at[dest].set(pid, mode="drop")
+
+
 def free_slot_pages(state: AllocState, page_table: jax.Array,
                     slot: jax.Array) -> Tuple[AllocState, jax.Array]:
     """Push all of ``slot``'s allocated pages back on the free stack and
@@ -178,6 +195,31 @@ def scatter_prefill(pool: jax.Array, page_table_row: jax.Array,
     rows = jnp.pad(seq, ((0, 0), (0, pad), (0, 0)))
     rows = rows.reshape(hk, npg, ps, x).transpose(1, 0, 2, 3)
     return pool.at[dest].set(rows.astype(pool.dtype), mode="drop")
+
+
+def scatter_prefill_rows(pool: jax.Array, page_tables: jax.Array,
+                         seqs: jax.Array, page_size: int,
+                         pad_value=0) -> jax.Array:
+    """Batched scatter_prefill: every row of a prefill group in one call.
+
+    pool (P, Hk, ps, X) takes seqs (B, Hk, L, X); pool (P, ps) takes seqs
+    (B, L).  page_tables: (B, MP) — -1 ids (bucketed-pad overhang, or a
+    dummy row's all -1) route out of bounds and drop.  Page ids are unique
+    across rows, so destinations never conflict."""
+    p, ps = pool.shape[0], page_size
+    l = seqs.shape[-2] if pool.ndim == 4 else seqs.shape[-1]
+    npg = num_pages(l, ps)
+    pad = npg * ps - l
+    ids = page_tables[:, :npg]                            # (B, npg)
+    dest = jnp.where(ids >= 0, ids, jnp.int32(p)).reshape(-1)
+    if pool.ndim == 2:
+        rows = jnp.pad(seqs, ((0, 0), (0, pad)), constant_values=pad_value)
+        return pool.at[dest].set(rows.reshape(-1, ps), mode="drop")
+    b, hk, _, x = seqs.shape
+    rows = jnp.pad(seqs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    rows = rows.reshape(b, hk, npg, ps, x).transpose(0, 2, 1, 3, 4)
+    return pool.at[dest].set(rows.reshape(b * npg, hk, ps, x)
+                             .astype(pool.dtype), mode="drop")
 
 
 # ------------------------------------------------------ memory accounting

@@ -1,0 +1,344 @@
+"""Disaggregated batched-prefill scheduler tests.
+
+Row-identity: the batched ragged prefill (one (Bp, S) call per admission
+group, per-row lengths threaded into sparse-MHA top-L budgets and
+routed-FFN dispatch capacities) must produce greedy outputs identical to
+the serial batch-1 engine across {dense, sparse-MHA decode kernel on/off}
+x {contiguous, paged} x ragged lengths x EOS-recycled slots.  Plus: the
+prefill/decode overlap loop, non-head-of-line-blocking partial admission,
+per-request top-p (nucleus) sampling, model-level ragged exactness (LM +
+enc-dec), and the batched page-wise scatter.  The wide sweep is `slow`;
+everything else runs in scripts/ci_fast.sh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.params import init_tree
+from repro.models import encdec, transformer
+from repro.serving import kv_pages as kvp
+from repro.serving.engine import Engine, Request
+from repro.train.state import model_defs
+
+MAX_LEN, SLOTS, GEN, CHUNK, PS = 48, 3, 6, 4, 16
+
+
+def _tiny_cfg(**spt):
+    cfg = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256)
+    spt.setdefault("kv_page_size", PS)
+    return cfg.with_spt(**spt)
+
+
+_params_cache = {}
+
+
+def _params(cfg):
+    key = (cfg.name, cfg.spt.sparse_mha, cfg.spt.routed_ffn, str(cfg.dtype))
+    if key not in _params_cache:
+        _params_cache[key] = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    return _params_cache[key]
+
+
+def _reqs(cfg, lens, gen=GEN, seed=1, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, tokens=rng.integers(
+        0, cfg.vocab_size, size=ln, dtype=np.int32).tolist(),
+        max_new_tokens=gen, **kw) for i, ln in enumerate(lens)]
+
+
+def _serial_vs_batched(cfg, reqs, eos_id=None, kv_layout="contiguous",
+                      slots=SLOTS, ratio=0.0, max_len=MAX_LEN, kv_pages=None):
+    params = _params(cfg)
+    run_cfg = cfg.with_spt(kv_layout=kv_layout)
+    serial = Engine(run_cfg, params, max_len=max_len, num_slots=slots,
+                    decode_chunk=CHUNK, prefill_batch=1, kv_pages=kv_pages)
+    batched = Engine(run_cfg, params, max_len=max_len, num_slots=slots,
+                     decode_chunk=CHUNK, prefill_batch=slots,
+                     prefill_decode_ratio=ratio, kv_pages=kv_pages)
+    out_s = serial.run(reqs, eos_id=eos_id)
+    out_b = batched.run(reqs, eos_id=eos_id)
+    return out_s, out_b, serial, batched
+
+
+# ------------------------------------------------------------ row identity
+def test_batched_matches_serial_ragged_sparse():
+    """Default SPT config (sparse MHA + routed FFN at paper capacity —
+    real drops possible), ragged lengths, more requests than slots."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [16, 5, 23, 9, 12])
+    out_s, out_b, serial, batched = _serial_vs_batched(cfg, reqs)
+    assert [c.tokens for c in out_b] == [c.tokens for c in out_s]
+    assert [c.finish_reason for c in out_b] == \
+        [c.finish_reason for c in out_s]
+    # the group admission actually batched (and the serial engine didn't)
+    assert serial.last_stats.prefill_batch_occupancy == 1.0
+    assert batched.last_stats.prefill_batch_occupancy > 1.0
+    assert batched.last_stats.prefill_batches < serial.last_stats.admitted
+    assert batched.last_stats.ttft_avg_s > 0.0
+    assert len(batched._chunk_cache) == 1            # still traces once
+
+
+def test_batched_matches_serial_dense_paged_and_contiguous():
+    cfg = dataclasses.replace(_tiny_cfg(), name="tiny-dense-b").with_spt(
+        sparse_mha=False, routed_ffn=False)
+    reqs = _reqs(cfg, [5, 9, 11, 16], seed=2)
+    for layout in ("contiguous", "paged"):
+        out_s, out_b, _, _ = _serial_vs_batched(cfg, reqs, kv_layout=layout)
+        assert [c.tokens for c in out_b] == [c.tokens for c in out_s], layout
+
+
+def test_batched_matches_serial_paged_sparse_eos_recycling():
+    """Paged layout + sparse jnp decode + EOS retirement: slots AND pages
+    recycle between groups; batched admission must not disturb either."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [16, 16, 16, 16], seed=3)
+    free = [c.tokens for c in Engine(
+        cfg, _params(cfg), max_len=MAX_LEN, num_slots=SLOTS,
+        decode_chunk=CHUNK).run(reqs)]
+    eos = free[0][2]
+    out_s, out_b, _, eng_b = _serial_vs_batched(cfg, reqs, eos_id=eos,
+                                                kv_layout="paged")
+    assert [c.tokens for c in out_b] == [c.tokens for c in out_s]
+    assert out_b[0].finish_reason == "eos"
+    assert eng_b.last_stats.completed == 4
+    assert eng_b.last_stats.kv_pages_peak <= eng_b.last_stats.kv_pages_total
+
+
+def test_batched_matches_serial_sparse_decode_kernel_on_off(monkeypatch):
+    """The acceptance matrix: batched admission must be row-identical to
+    the serial batch-1 engine on every {contiguous, paged} x {sparse decode
+    kernel, jnp fallback} variant (all-f32; each variant is compared
+    against ITS OWN serial run — kernel-vs-jnp parity itself is covered by
+    tests/test_sparse_decode.py with float tolerances).  The kill switch
+    must also reduce the batched kernel run to the batched jnp outputs."""
+    base = dataclasses.replace(
+        _tiny_cfg(), dtype=jnp.float32, name="tiny-f32").with_spt(
+        routed_ffn=False)
+    reqs = _reqs(base, [9, 14, 6], gen=3, seed=5)
+
+    def run(layout, impl, batch, disable=False):
+        monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disable else "0")
+        cfg = base.with_spt(kv_layout=layout, decode_attn_impl=impl)
+        try:
+            eng = Engine(cfg, _params(base), max_len=32, num_slots=2,
+                         decode_chunk=CHUNK, prefill_batch=batch)
+            return [c.tokens for c in eng.run(reqs)]
+        finally:
+            monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
+
+    for layout in ("contiguous", "paged"):
+        for impl in ("jnp", "kernel"):
+            serial = run(layout, impl, batch=1)
+            assert run(layout, impl, batch=2) == serial, (layout, impl)
+    # kill switch: batched kernel run falls back to the batched jnp outputs
+    assert run("paged", "kernel", batch=2, disable=True) \
+        == run("paged", "jnp", batch=2)
+
+
+def test_overlap_ratio_interleaves_and_matches():
+    """prefill_decode_ratio > 0 interleaves admission groups with decode
+    chunks (more, smaller prefill batches) without changing outputs."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [12, 9, 16, 7, 11, 14], seed=4)
+    out_s, out_b, _, eng_o = _serial_vs_batched(cfg, reqs, ratio=1.0,
+                                                slots=2)
+    assert [c.tokens for c in out_b] == [c.tokens for c in out_s]
+    s = eng_o.last_stats
+    assert s.admitted == 6 and s.completed == 6
+    assert s.prefill_batches >= 2      # the budget split the admissions
+
+
+def test_partial_admission_no_head_of_line_block():
+    """A big request that does not fit the page pool must not block later
+    requests that do: they admit first, the big one follows once pages
+    free, accounting stays correct."""
+    cfg = _tiny_cfg()
+    rng = np.random.default_rng(7)
+    big = Request(uid=0, tokens=rng.integers(
+        0, cfg.vocab_size, size=30, dtype=np.int32).tolist(),
+        max_new_tokens=GEN)
+    small = [Request(uid=1 + i, tokens=rng.integers(
+        0, cfg.vocab_size, size=6, dtype=np.int32).tolist(),
+        max_new_tokens=GEN) for i in range(2)]
+    reqs = [big] + small
+    frontend = 0
+    ws_big = kvp.num_pages(30 + GEN - 1, PS)
+    ws_small = kvp.num_pages(6 + GEN - 1, PS)
+    pool = ws_big + ws_small          # big + one small, never all three
+    params = _params(cfg)
+    eng = Engine(cfg.with_spt(kv_layout="paged"), params, max_len=MAX_LEN,
+                 num_slots=SLOTS, decode_chunk=CHUNK, kv_pages=pool)
+    # seed a long-running resident so the pool is tight from the start:
+    # run all three + resident together
+    resident = Request(uid=9, tokens=rng.integers(
+        0, cfg.vocab_size, size=30, dtype=np.int32).tolist(),
+        max_new_tokens=GEN)
+    out = eng.run([resident] + reqs)
+    s = eng.last_stats
+    assert s.admitted == 4 and s.completed == 4
+    assert s.admission_stalls > 0      # somebody had to wait for pages
+    # row-identity against the serial contiguous engine
+    ref = Engine(cfg, params, max_len=MAX_LEN, num_slots=SLOTS,
+                 decode_chunk=CHUNK, prefill_batch=1).run([resident] + reqs)
+    assert [c.tokens for c in out] == [c.tokens for c in ref]
+
+
+# ------------------------------------------------------------ model level
+def test_lm_prefill_ragged_batch_rows_exact():
+    """(Bp, S) batched ragged prefill logits == per-row batch-1 exact-length
+    prefill, bitwise, for the length-sensitive default config at paper
+    capacity (per-row top-L budgets + dispatch capacities)."""
+    cfg = _tiny_cfg()
+    assert transformer.length_sensitive(cfg)
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    lens = [5, 9, 16, 11]
+    toks = np.zeros((4, 16), np.int32)
+    prompts = []
+    for i, ln in enumerate(lens):
+        p = rng.integers(0, cfg.vocab_size, size=ln, dtype=np.int32)
+        prompts.append(p)
+        toks[i, :ln] = p
+    _, lg_b = transformer.lm_prefill_ragged(
+        params, cfg, {"tokens": jnp.asarray(toks)},
+        jnp.asarray(lens, jnp.int32), MAX_LEN)
+    for i, p in enumerate(prompts):
+        _, lg_1 = transformer.lm_prefill_ragged(
+            params, cfg, {"tokens": jnp.asarray(p[None, :])},
+            jnp.asarray([len(p)], jnp.int32), MAX_LEN)
+        np.testing.assert_array_equal(np.asarray(lg_b[i, -1]),
+                                      np.asarray(lg_1[0, -1]))
+
+
+def test_encdec_prefill_ragged_rows_match_batch1():
+    """Enc-dec ragged prefill: per-row last-position logits equal the
+    batch-1 encdec_prefill of each row at exact length."""
+    cfg = dataclasses.replace(
+        configs.get_smoke("whisper-base"), num_layers=2, encoder_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+        vocab_size=256)
+    params = init_tree(encdec.encdec_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    frames = jnp.asarray(rng.standard_normal((3, 6, cfg.d_model)),
+                         jnp.float32)
+    lens = [4, 9, 6]
+    toks = np.zeros((3, 9), np.int32)
+    prompts = []
+    for i, ln in enumerate(lens):
+        p = rng.integers(0, cfg.vocab_size, size=ln, dtype=np.int32)
+        prompts.append(p)
+        toks[i, :ln] = p
+    _, lg_b = encdec.encdec_prefill_ragged(
+        params, cfg, {"tokens": jnp.asarray(toks),
+                      "frontend_embeds": frames},
+        jnp.asarray(lens, jnp.int32), 24)
+    for i, p in enumerate(prompts):
+        _, lg_1 = encdec.encdec_prefill(
+            params, cfg, {"tokens": jnp.asarray(p[None, :]),
+                          "frontend_embeds": frames[i:i + 1]}, 24)
+        a = np.asarray(lg_b[i, -1], np.float32)
+        b = np.asarray(lg_1[0, -1], np.float32)
+        assert int(a.argmax()) == int(b.argmax()), f"row {i}"
+        np.testing.assert_allclose(a, b, rtol=1e-2, atol=1e-2)
+
+
+def test_scatter_prefill_rows_batched_pagewise():
+    """The batched page-wise scatter == per-row scatter_prefill loop, and
+    dummy rows (all -1 page ids) drop without touching the pool."""
+    rng = np.random.default_rng(17)
+    pool0 = jnp.zeros((6, 2, PS, 8), jnp.float32)
+    pts = jnp.asarray([[2, 5], [3, -1], [-1, -1]])       # row 2 = dummy
+    seqs = jnp.asarray(rng.standard_normal((3, 2, 2 * PS, 8)), jnp.float32)
+    got = kvp.scatter_prefill_rows(pool0, pts, seqs, PS)
+    want = pool0
+    for i in range(2):                                   # real rows only
+        want = kvp.scatter_prefill(want, pts[i], seqs[i], PS)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # slot_pos-style (P, ps) pools too
+    spool = jnp.full((6, PS), -1, jnp.int32)
+    sseq = jnp.arange(3 * 2 * PS, dtype=jnp.int32).reshape(3, 2 * PS)
+    got_s = kvp.scatter_prefill_rows(spool, pts, sseq, PS, pad_value=-1)
+    want_s = spool
+    for i in range(2):
+        want_s = kvp.scatter_prefill(want_s, pts[i], sseq[i], PS, -1)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+# ---------------------------------------------------------------- sampling
+def test_top_p_tiny_equals_greedy():
+    """top_p -> 0 keeps only the top-1 token (the first sorted token always
+    survives the nucleus), so sampling must reproduce greedy exactly —
+    in the chunk AND in the host-side first-token path."""
+    cfg = _tiny_cfg()
+    reqs = _reqs(cfg, [16, 12], seed=19)
+    greedy = [c.tokens for c in Engine(
+        cfg, _params(cfg), max_len=MAX_LEN, num_slots=2,
+        decode_chunk=CHUNK).run(reqs)]
+    nucleus = [dataclasses.replace(r, temperature=1.3, top_p=1e-6)
+               for r in reqs]
+    out = Engine(cfg, _params(cfg), max_len=MAX_LEN, num_slots=2,
+                 decode_chunk=CHUNK).run(nucleus, key=jax.random.PRNGKey(5))
+    assert [c.tokens for c in out] == greedy
+
+
+def test_top_p_statistical_nucleus_membership():
+    """Every sampled token must lie inside the nucleus of the step's
+    distribution: replay the engine's own prefix through the per-token
+    decode path, recompute the nucleus set, assert membership.  Also:
+    reproducible under the same key, moved by a different key."""
+    cfg = dataclasses.replace(_tiny_cfg(), dtype=jnp.float32,
+                              name="tiny-f32-topp")
+    params = _params(cfg)
+    top_p, temp, gen = 0.8, 1.5, 5
+    prompts = _reqs(cfg, [14, 10], gen=gen, seed=23,
+                    temperature=temp, top_p=top_p)
+    eng = Engine(cfg, params, max_len=MAX_LEN, num_slots=2,
+                 decode_chunk=CHUNK)
+    out = eng.run(prompts, key=jax.random.PRNGKey(29))
+    again = eng.run(prompts, key=jax.random.PRNGKey(29))
+    assert [c.tokens for c in again] == [c.tokens for c in out]
+    eng.run(prompts, key=jax.random.PRNGKey(31))     # different key: no
+    # equality asserted (a tiny vocab can coincide), but the path runs
+    # replay: logits at each step given the engine's generated prefix
+    prefill = jax.jit(lambda p_, t: transformer.lm_prefill(
+        p_, cfg, {"tokens": t}, max_len=MAX_LEN))
+    decode = jax.jit(lambda p_, c, t, pos: transformer.lm_decode_step(
+        p_, cfg, c, t, pos))
+    for r, c in zip(prompts, out):
+        toks = jnp.asarray(np.asarray(r.tokens, np.int32)[None])
+        caches, logits = prefill(params, toks)
+        pos0 = toks.shape[1]
+        seq = c.tokens
+        for t, picked in enumerate(seq):
+            lg = np.asarray(logits[0, -1], np.float32)
+            scaled = lg / temp
+            srt = np.sort(scaled)[::-1]
+            e = np.exp(srt - srt[0])
+            probs = e / e.sum()
+            cum = np.cumsum(probs)
+            kcnt = max(1, int(((cum - probs) < top_p + 1e-5).sum()))
+            nucleus = set(np.argsort(scaled)[::-1][:kcnt].tolist())
+            assert picked in nucleus, f"step {t}: {picked} not in nucleus"
+            if t + 1 < len(seq):
+                caches, logits = decode(
+                    params, caches, jnp.asarray([picked], jnp.int32),
+                    jnp.asarray(pos0 + t, jnp.int32))
+
+
+# ------------------------------------------------------------- wide sweep
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("sparse", [False, True])
+def test_batched_parity_sweep(layout, sparse):
+    cfg = _tiny_cfg() if sparse else dataclasses.replace(
+        _tiny_cfg(), name=f"tiny-sweep-{layout}").with_spt(
+        sparse_mha=False, routed_ffn=False)
+    reqs = _reqs(cfg, [16, 7, 21, 11, 5, 13], seed=37)
+    out_s, out_b, _, _ = _serial_vs_batched(cfg, reqs, kv_layout=layout)
+    assert [c.tokens for c in out_b] == [c.tokens for c in out_s]
