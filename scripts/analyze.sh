@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Static hot-path gate (runs on CPU, no benches, ~15s):
+#   1. python -m repro.analysis — jaxpr budgets/primitives over the hot
+#      entrypoints, Pallas VMEM/spec estimates, engine retrace
+#      accounting, and source lints (src/repro/analysis/).
+#   2. scripts/check_bench.py — checked-in BENCH_*.json ratio columns
+#      against the recorded floors in scripts/bench_floors.json.
+# scripts/ci_fast.sh runs this before pytest; REPRO_SKIP_ANALYSIS=1
+# skips it there (escape hatch for iterating on a known-violating tree).
+# Extra args pass through to the analysis CLI: analyze.sh --only lint
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis "$@"
+python scripts/check_bench.py

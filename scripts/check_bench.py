@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Compare the checked-in BENCH_*.json ratio columns against recorded
+floors (scripts/bench_floors.json).
+
+The benches themselves are too slow for CI, but their *outputs* are
+checked in — so a PR that silently regresses a kernel path shows up as a
+stale ratio only if someone looks.  This check makes the floors part of
+CI: every floor is a claim the README/EXPERIMENTS narrative relies on
+(decode FFN wins every row, paging saves >90% KV bytes, overlap improves
+TTFT), and a BENCH file rewritten with worse ratios fails fast.  Floors
+sit ~10-15% below recorded values, so honest container jitter at
+re-measurement passes; halving a speedup does not.
+
+Check forms (see bench_floors.json):
+  rows/select/metric/agg  aggregate a metric over matching rows of a list
+  path                    walk nested dicts to a scalar
+Both then require  value >= floor.
+
+Exit 0 = all floors hold; 1 = regression (or missing file/key); 2 = bad
+floors file.  Stdlib only; no repo imports.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FLOORS = REPO / "scripts" / "bench_floors.json"
+
+AGGS = {
+    "min": min,
+    "max": max,
+    "mean": lambda xs: sum(xs) / len(xs),
+}
+
+
+def resolve(check: dict) -> float:
+    data = json.loads((REPO / check["file"]).read_text())
+    if "path" in check:
+        node = data
+        for key in check["path"]:
+            node = node[key]
+        return float(node)
+    rows = data[check.get("rows", "rows")]
+    select = check.get("select", {})
+    picked = [r[check["metric"]] for r in rows
+              if all(r.get(k) == v for k, v in select.items())
+              and check["metric"] in r]
+    if not picked:
+        raise KeyError(f"no rows match select={select} with metric "
+                       f"{check['metric']!r}")
+    return float(AGGS[check.get("agg", "min")](picked))
+
+
+def describe(check: dict) -> str:
+    if "path" in check:
+        return f"{check['file']}:{'.'.join(check['path'])}"
+    sel = ",".join(f"{k}={v}" for k, v in check.get("select", {}).items())
+    return (f"{check['file']}:{check.get('agg', 'min')}"
+            f"({check['metric']}{'|' + sel if sel else ''})")
+
+
+def main() -> int:
+    try:
+        floors = json.loads(FLOORS.read_text())
+        checks = floors["checks"]
+    except (OSError, KeyError, json.JSONDecodeError) as e:
+        print(f"[bench] bad floors file {FLOORS}: {e}", file=sys.stderr)
+        return 2
+    failures = 0
+    for check in checks:
+        label = describe(check)
+        try:
+            value = resolve(check)
+        except (OSError, KeyError, json.JSONDecodeError, TypeError) as e:
+            print(f"[bench] FAIL {label}: unreadable ({e})")
+            failures += 1
+            continue
+        floor = float(check["floor"])
+        if value >= floor:
+            print(f"[bench] ok   {label}: {value:g} >= floor {floor:g}")
+        else:
+            print(f"[bench] FAIL {label}: {value:g} < floor {floor:g}"
+                  f" — {check.get('why', '')}")
+            failures += 1
+    if failures:
+        print(f"[bench] FAILED: {failures} floor(s) broken")
+        return 1
+    print(f"[bench] clean: {len(checks)} floor(s) hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

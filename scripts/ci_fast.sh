@@ -21,5 +21,14 @@
 #   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# Static hot-path gate first (jaxpr/Pallas/trace audits + bench-ratio
+# floors, scripts/analyze.sh): a few seconds on CPU, and it fails fast
+# on the structural regressions parity tests can't see (resurrected
+# dispatch buffers, in-loop retraces, VMEM-busting BlockSpecs).
+# REPRO_SKIP_ANALYSIS=1 skips it while iterating on a known-violating
+# tree.
+if [[ "${REPRO_SKIP_ANALYSIS:-0}" != "1" ]]; then
+    scripts/analyze.sh
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m "not slow" "$@"

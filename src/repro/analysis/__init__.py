@@ -1,0 +1,33 @@
+"""Static analysis over the repo's compiled artifacts and source.
+
+SPT's value proposition is what the hot path *doesn't* do: sparse MHA
+never stores large attention weights, routed FFN never builds the dense
+dispatch tensor, the serving loop never retraces or syncs per token.
+Parity tests cannot see those properties — a refactor that resurrects a
+``(B, G, C, d)`` dispatch buffer or an in-loop retrace keeps every test
+green while the paper's memory/speed claims quietly evaporate.  This
+package makes the claims machine-checked on CPU, no TPU needed:
+
+  * ``jaxpr_audit``  — walks the ClosedJaxpr of registered hot
+    entrypoints: per-eqn intermediate-size budgets, dispatch-buffer and
+    cache-repeat shape patterns, forbidden host-callback primitives,
+    f32-accumulator policy inside Pallas kernels, and expected
+    pallas_call presence/absence per ``core/dispatch.py`` switch state.
+  * ``pallas_audit`` — static VMEM-residency estimates from BlockSpecs +
+    grid + scratch shapes against the per-platform budget, tile
+    divisibility, and scalar-prefetch operand arity.
+  * ``trace_guard``  — runtime context manager counting retraces of the
+    engine's jitted functions (one trace per shape bucket over a full
+    ``Engine.run()``), plus an opt-in ``jax.transfer_guard`` wrapper.
+  * ``lint``         — stdlib-``ast`` rules over ``src/``: no
+    ``jnp.repeat`` in models//serving/, no host syncs in hot modules,
+    ``interpret=None`` defaults on kernel wrappers, kernel dispatch
+    routed through ``core/dispatch.py``.
+
+CLI: ``python -m repro.analysis`` (or ``scripts/analyze.sh``) runs every
+registered audit and exits nonzero on violations.  Rules register via
+``registry.audit``; hot entrypoints via ``jaxpr_audit.hot_entrypoint``.
+"""
+from repro.analysis.registry import AUDITS, Violation, audit, run_audits
+
+__all__ = ["AUDITS", "Violation", "audit", "run_audits"]

@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.analysis`` — run every registered audit, print
+violations, exit nonzero if any fired.  ``--only jaxpr,lint`` selects
+layers; ``--list`` shows what's registered.  Wired into CI via
+``scripts/analyze.sh`` (which ``scripts/ci_fast.sh`` runs before pytest).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional
+
+from repro.analysis import registry
+# importing the layers registers their audits
+from repro.analysis import jaxpr_audit    # noqa: F401
+from repro.analysis import lint           # noqa: F401
+from repro.analysis import pallas_audit   # noqa: F401
+from repro.analysis import trace_guard    # noqa: F401
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static hot-path audits: jaxpr budgets/primitives, "
+                    "Pallas VMEM & specs, engine retrace accounting, "
+                    "source lints.")
+    ap.add_argument("--only", metavar="NAMES",
+                    help="comma-separated audit names (default: all)")
+    ap.add_argument("--list", action="store_true", dest="list_audits",
+                    help="list registered audits and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_audits:
+        for name in registry.AUDITS:
+            print(name)
+        return 0
+
+    names = ([n.strip() for n in args.only.split(",") if n.strip()]
+             if args.only else None)
+
+    def report(name: str, vs: List[registry.Violation]) -> None:
+        status = "ok" if not vs else f"{len(vs)} violation(s)"
+        print(f"[analysis] {name:<8} {status}", flush=True)
+        for v in vs:
+            print(f"  FAIL {v}", flush=True)
+
+    t0 = time.perf_counter()
+    try:
+        violations = registry.run_audits(names, report)
+    except KeyError as e:
+        print(f"[analysis] {e}", file=sys.stderr)
+        return 2
+    dt = time.perf_counter() - t0
+    if violations:
+        print(f"[analysis] FAILED: {len(violations)} violation(s) "
+              f"in {dt:.1f}s")
+        return 1
+    print(f"[analysis] clean: {len(registry.AUDITS) if names is None else len(names)} "
+          f"audit(s) in {dt:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

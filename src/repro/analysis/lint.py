@@ -1,0 +1,185 @@
+"""Layer 4: stdlib-``ast`` lints over ``src/repro``.
+
+Four rules, each encoding a hot-path invariant the jaxpr/Pallas audits
+can't see because it lives in *source* convention rather than in any one
+traced artifact:
+
+  lint.jnp-repeat        models/ + serving/ must not call ``jnp.repeat``
+                         — on cache-adjacent shapes it materializes a
+                         (B, Hq, S, d)-class expansion; GQA paths pack
+                         heads on the sublane axis instead and paging
+                         masks broadcast+reshape (core/ keeps its
+                         documented jnp fallback oracles, which ARE the
+                         gather formulation the kernels replace).
+  lint.host-sync         hot modules (models/, kernels/, core/) must not
+                         call ``.item()`` or ``np.asarray`` — either one
+                         is a device sync inside code that the serving
+                         loop jits (the engine's host *scheduler* in
+                         serving/engine.py syncs at chunk boundaries by
+                         design and is exempt).
+  lint.interpret-default kernels/: every function with a defaulted
+                         ``interpret`` parameter must default to None
+                         ("derive from backend", kernels.resolve_interpret)
+                         so no wrapper hard-codes a platform.
+  lint.dispatch-routing  models/ + serving/ must not import
+                         jax.experimental.pallas nor read the
+                         REPRO_DISABLE_KERNELS env var — kernel gating
+                         routes exclusively through core/dispatch.py's
+                         ``use_*_kernel`` switches, and the kernel
+                         wrappers own every pallas_call.
+
+Each rule is (id, applies-to-path predicate, AST checker) in ``RULES`` —
+adding a rule is appending a tuple.  ``lint_source`` lints one buffer
+(used by tests/test_analysis.py's violating fixtures); ``run_lint`` walks
+the tree.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Callable, List, Tuple
+
+from repro.analysis.registry import Violation, audit
+
+SRC_ROOT = Path(__file__).resolve().parents[1]          # .../src/repro
+
+KILL_SWITCH = "REPRO_DISABLE_KERNELS"
+
+
+def _in(*dirs: str) -> Callable[[str], bool]:
+    def applies(rel: str) -> bool:
+        return any(rel.startswith(d + "/") for d in dirs)
+    return applies
+
+
+def _is_name_attr(node: ast.AST, base: str, attr: str) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == attr
+            and isinstance(node.value, ast.Name) and node.value.id == base)
+
+
+# ------------------------------------------------------------ rule bodies
+def _check_jnp_repeat(rel: str, tree: ast.AST) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_name_attr(
+                node.func, "jnp", "repeat"):
+            out.append(Violation(
+                "lint.jnp-repeat", f"{rel}:{node.lineno}",
+                "jnp.repeat in models//serving/ — pack GQA heads on the "
+                "sublane axis or broadcast+reshape a static expansion"))
+    return out
+
+
+def _check_host_sync(rel: str, tree: ast.AST) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args):
+            out.append(Violation(
+                "lint.host-sync", f"{rel}:{node.lineno}",
+                ".item() forces a device->host sync in a hot module"))
+        if (_is_name_attr(node.func, "np", "asarray")
+                or _is_name_attr(node.func, "numpy", "asarray")):
+            out.append(Violation(
+                "lint.host-sync", f"{rel}:{node.lineno}",
+                "np.asarray() forces a device->host sync in a hot module "
+                "(use jnp.asarray for device-side casts)"))
+    return out
+
+
+def _check_interpret_default(rel: str, tree: ast.AST) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        # (arg, default) pairs for positional-or-kw and kw-only params;
+        # positionals without defaults pair with None (pass-through args
+        # like _forward(..., interpret, ...) are exempt — only a *default*
+        # can hard-code a platform).
+        pos = a.posonlyargs + a.args
+        pairs = list(zip(reversed(pos), reversed(a.defaults)))
+        pairs += [(arg, d) for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+                  if d is not None]
+        for arg, default in pairs:
+            if arg.arg != "interpret":
+                continue
+            if not (isinstance(default, ast.Constant)
+                    and default.value is None):
+                out.append(Violation(
+                    "lint.interpret-default",
+                    f"{rel}:{node.lineno}",
+                    f"def {node.name}: interpret must default to None "
+                    "(backend-derived via kernels.resolve_interpret), "
+                    f"not {ast.unparse(default)}"))
+    return out
+
+
+def _check_dispatch_routing(rel: str, tree: ast.AST) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("jax.experimental.pallas"):
+                    out.append(Violation(
+                        "lint.dispatch-routing", f"{rel}:{node.lineno}",
+                        "direct pallas import outside kernels/ — lower "
+                        "through a kernels/ wrapper gated by "
+                        "core/dispatch.py"))
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            names = {a.name for a in node.names}
+            if (mod.startswith("jax.experimental.pallas")
+                    or (mod == "jax.experimental" and "pallas" in names)):
+                out.append(Violation(
+                    "lint.dispatch-routing", f"{rel}:{node.lineno}",
+                    "direct pallas import outside kernels/ — lower "
+                    "through a kernels/ wrapper gated by core/dispatch.py"))
+        elif (isinstance(node, ast.Constant)
+              and node.value == KILL_SWITCH):
+            out.append(Violation(
+                "lint.dispatch-routing", f"{rel}:{node.lineno}",
+                f"reads {KILL_SWITCH} directly — the kill switch is "
+                "owned by core/dispatch.py (kernels_disabled())"))
+    return out
+
+
+RULES: List[Tuple[str, Callable[[str], bool],
+                  Callable[[str, ast.AST], List[Violation]]]] = [
+    ("lint.jnp-repeat", _in("models", "serving"), _check_jnp_repeat),
+    ("lint.host-sync", _in("models", "kernels", "core"), _check_host_sync),
+    ("lint.interpret-default", _in("kernels"), _check_interpret_default),
+    ("lint.dispatch-routing", _in("models", "serving"),
+     _check_dispatch_routing),
+]
+
+# serving/engine.py is the host scheduler: np mirrors of slot state are
+# its job.  Nothing else is exempt from anything.
+EXEMPT = {("lint.host-sync", "serving/engine.py")}
+
+
+def lint_source(source: str, rel: str) -> List[Violation]:
+    """Lint one buffer as if it lived at ``rel`` (posix, repro-relative,
+    e.g. "models/foo.py").  Rule applicability follows the path."""
+    tree = ast.parse(source, filename=rel)
+    out: List[Violation] = []
+    for rule_id, applies, check in RULES:
+        if not applies(rel) or (rule_id, rel) in EXEMPT:
+            continue
+        out.extend(check(rel, tree))
+    return out
+
+
+def run_lint(root: Path = SRC_ROOT) -> List[Violation]:
+    out: List[Violation] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        out.extend(lint_source(path.read_text(), rel))
+    return out
+
+
+@audit("lint")
+def _lint_audit() -> List[Violation]:
+    return run_lint()

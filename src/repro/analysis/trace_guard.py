@@ -1,0 +1,212 @@
+"""Layer 3: runtime retrace accounting for the serving engine.
+
+The engine's whole performance story rests on "the generation traces
+ONCE": decode runs in jit-compiled while_loop chunks keyed by a small
+static tuple, prefill shapes are bucketed to powers of two, and host
+state stays in numpy mirrors.  A one-line slip — passing a python scalar
+one iteration and a () array the next (weak-type flip), keying a chunk
+on a per-request value, rebuilding a jit object per scheduling iteration
+— silently multiplies compiles while every output stays correct.
+
+``TraceGuard`` wraps the engine's jitted callables, buckets each call's
+signature by (treedef, leaf shapes/dtypes) — python scalars bucket like
+() arrays of their result dtype precisely so weak-type flip-flops land
+in ONE bucket while jit treats them as two — and afterwards compares
+each function's jit-cache growth against the number of distinct buckets:
+
+  trace.retrace            more new traces than distinct signature
+                           buckets (weak-type churn, non-hashable-static
+                           churn, donation mismatches)
+  trace.per-iteration-jit  one logical callable backed by >1 jit objects
+                           (a jax.jit rebuilt inside the serving loop —
+                           every call compiles from scratch)
+
+``guard_engine(engine)`` instruments a live Engine (chunk + prefill
+builders and the cache-row writers) for the duration of a ``with``
+block and raises on violations at exit.  ``no_implicit_transfers()`` is
+the opt-in strict mode: it turns silent device<->host transfers inside
+the block into errors via ``jax.transfer_guard`` (opt-in because the
+engine's host scheduler legitimately syncs at chunk boundaries).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.registry import Violation, audit
+
+
+def _canon_leaf(x: Any) -> Tuple:
+    """Signature atom: arrays by (shape, dtype); python scalars as the
+    () array jit would weakly promote them to; everything else by value
+    (static args participate in the jit cache key by equality)."""
+    if isinstance(x, (jax.Array, np.ndarray)):
+        return ("arr", tuple(x.shape), jnp.dtype(x.dtype).name)
+    if isinstance(x, (bool, int, float, complex)):
+        return ("arr", (), jnp.dtype(jnp.result_type(x)).name)
+    return ("static", repr(x))
+
+
+def call_signature(args: Tuple, kwargs: Dict) -> Tuple:
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (str(treedef),) + tuple(_canon_leaf(x) for x in leaves)
+
+
+def _cache_size(fn) -> Optional[int]:
+    probe = getattr(fn, "_cache_size", None)
+    try:
+        return int(probe()) if callable(probe) else None
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass
+class _Tracked:
+    name: str
+    fn: Callable
+    baseline: Optional[int]
+    sigs: Set[Tuple] = dataclasses.field(default_factory=set)
+    calls: int = 0
+
+
+class TraceGuard:
+    """Call-signature and jit-cache bookkeeping over tracked callables."""
+
+    def __init__(self) -> None:
+        self._by_id: Dict[int, _Tracked] = {}
+        self._names: Dict[str, Set[int]] = {}
+
+    def track(self, name: str, fn: Callable,
+              unique: bool = False) -> Callable:
+        """Return ``fn`` wrapped to record each call.  Tracking the same
+        underlying object twice reuses one record.  ``unique=True``
+        declares that this logical name must always resolve to the same
+        jit object — a second object under the name is a
+        per-iteration-jit violation even if each one traces once."""
+        rec = self._by_id.get(id(fn))
+        if rec is None:
+            rec = _Tracked(name=name, fn=fn, baseline=_cache_size(fn))
+            self._by_id[id(fn)] = rec
+            key = name if unique else f"{name}#{len(self._by_id)}"
+            self._names.setdefault(key, set()).add(id(fn))
+
+        def wrapped(*args, **kwargs):
+            rec.calls += 1
+            rec.sigs.add(call_signature(args, kwargs))
+            return fn(*args, **kwargs)
+
+        return wrapped
+
+    def violations(self) -> List[Violation]:
+        out: List[Violation] = []
+        for rec in self._by_id.values():
+            size = _cache_size(rec.fn)
+            if size is None or rec.baseline is None or not rec.calls:
+                continue
+            traces = size - rec.baseline
+            buckets = len(rec.sigs)
+            if traces > buckets:
+                out.append(Violation(
+                    "trace.retrace", rec.name,
+                    f"{traces} new traces over {rec.calls} calls in only "
+                    f"{buckets} signature bucket(s) — something "
+                    "non-shape (weak type? unhashable static?) is "
+                    "churning the jit cache"))
+        for name, ids in self._names.items():
+            if len(ids) > 1:
+                recs = [self._by_id[i] for i in ids]
+                out.append(Violation(
+                    "trace.per-iteration-jit", name,
+                    f"{len(ids)} distinct jit objects served this "
+                    f"callable ({sum(r.calls for r in recs)} calls) — "
+                    "the jit wrapper is being rebuilt instead of reused"))
+        return out
+
+
+@contextlib.contextmanager
+def guard_engine(engine, raise_on_violation: bool = True):
+    """Instrument a live ``serving.engine.Engine`` for the with-block:
+    every jitted chunk/prefill the scheduler fetches and every cache-row
+    writer call is tracked; at exit, retrace violations raise (or are
+    left on ``guard.violations()`` with ``raise_on_violation=False``)."""
+    guard = TraceGuard()
+    saved = {}
+
+    def hook_getter(attr: str, label: str):
+        orig = getattr(engine, attr)
+        saved[attr] = orig
+
+        def getter(*args, **kwargs):
+            fn = orig(*args, **kwargs)
+            # the static key IS the args tuple: fetching the same key must
+            # hand back the same jit object, so track it as unique
+            return guard.track(f"{label}{args}" if args else label, fn,
+                               unique=True)
+        setattr(engine, attr, getter)
+
+    def hook_fn(attr: str):
+        fn = getattr(engine, attr, None)
+        if fn is None:
+            return
+        saved[attr] = fn
+        setattr(engine, attr, guard.track(attr.lstrip("_"), fn,
+                                          unique=True))
+
+    hook_getter("_get_chunk", "decode_chunk")
+    hook_getter("_get_prefill", "prefill")
+    for attr in ("_write_rows", "_alloc_rows", "_free_slot"):
+        hook_fn(attr)
+    try:
+        yield guard
+    finally:
+        for attr, fn in saved.items():
+            setattr(engine, attr, fn)
+    if raise_on_violation:
+        vs = guard.violations()
+        if vs:
+            raise RuntimeError(
+                "trace guard violations:\n  "
+                + "\n  ".join(str(v) for v in vs))
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Strict mode: any implicit device<->host transfer in the block
+    raises (jax.transfer_guard("disallow")).  Opt-in — the engine's host
+    scheduler syncs by design, so apply this to pure device code only."""
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@audit("trace")
+def _trace_audit() -> List[Violation]:
+    """Serve a tiny two-request run end-to-end under the guard: the
+    compiled chunk must trace once per (slots, max_gen, ...) bucket and
+    the batched prefill once per (Bp, S) bucket."""
+    from repro import configs
+    import dataclasses as dc
+    from repro.core.params import init_tree
+    from repro.serving.engine import Engine, Request
+    from repro.train.state import model_defs
+
+    cfg = dc.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256, dtype=jnp.float32).with_spt(
+            ffn_capacity_factor=8.0)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32),
+        init_tree(model_defs(cfg), jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, tokens=rng.integers(0, 256, size=ln).tolist(),
+                    max_new_tokens=4)
+            for i, ln in enumerate([5, 9, 12])]
+    eng = Engine(cfg, params, max_len=32, num_slots=2, decode_chunk=4)
+    with guard_engine(eng, raise_on_violation=False) as guard:
+        eng.run(reqs)
+    return guard.violations()

@@ -7,6 +7,7 @@ the op is non-differentiable by construction (like the paper's).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
@@ -15,10 +16,11 @@ from repro.kernels.pq_quantize.pq_quantize import pq_assign_kernel
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def pq_assign(x: jax.Array, codebooks: jax.Array, *, tile_n: int = 256,
-              interpret: bool = True) -> jax.Array:
+              interpret: Optional[bool] = None) -> jax.Array:
     """x: (..., n, d); codebooks (M, E, d') -> (..., n, M) int32.
 
-    interpret=True by default in this CPU container; pass False on TPU.
+    interpret=None derives from the backend (interpret off TPU, compiled
+    on TPU) — see kernels.resolve_interpret.
     """
     lead = x.shape[:-2]
     g = 1

@@ -12,10 +12,13 @@ E=16): x 256 KB + codebooks ~16 KB + codes 16 KB — comfortably < 16 MB.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 
 
 def _kernel(x_ref, cb_ref, codes_ref):
@@ -33,8 +36,9 @@ def _kernel(x_ref, cb_ref, codes_ref):
 
 
 def pq_assign_kernel(x: jax.Array, codebooks: jax.Array, *, tile_n: int = 256,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """x: (G, n, d); codebooks: (M, E, d') -> codes (G, n, M) int32."""
+    interpret = resolve_interpret(interpret)
     g, n, d = x.shape
     m, e, dp = codebooks.shape
     assert d == m * dp, (x.shape, codebooks.shape)

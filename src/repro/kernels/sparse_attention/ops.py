@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import pq
 from repro.core import sparse_attention as sa
+from repro.kernels import resolve_interpret
 from repro.kernels.pq_quantize.ops import pq_assign
 from repro.kernels.sparse_attention.sparse_attention import (
     sparse_attention_kernel, sparse_decode_attention_kernel)
@@ -88,11 +89,14 @@ _sparse_mha_op.defvjp(_fwd, _bwd)
 def sparse_mha(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
                scale: float, causal: bool = True,
                window: Optional[int] = None, q_offset: int = 0,
-               interpret: bool = True
+               interpret: Optional[bool] = None
                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Drop-in replacement for core.sparse_attention.sparse_mha."""
+    """Drop-in replacement for core.sparse_attention.sparse_mha.
+
+    interpret=None derives from the backend (resolved here, before the
+    custom_vjp, so forward and backward agree on the mode)."""
     out = _sparse_mha_op(q, k, v, codebooks, cfg, scale, causal, window,
-                         q_offset, interpret)
+                         q_offset, resolve_interpret(interpret))
     aux = {"l": jnp.asarray(sa.top_l(k.shape[2], cfg, window), jnp.int32)}
     if cfg.qerr_loss_weight > 0:
         aux["qerr"] = (pq.quantization_error(q, codebooks)
@@ -127,8 +131,7 @@ def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     like any dead slot) so the kernels keep their Tk tiling — and their
     O(Tk) VMEM bound — at arbitrary serving max_len.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     b, hq, _, d = q.shape
     _, hk, s, _ = k_cache.shape
     r = hq // hk

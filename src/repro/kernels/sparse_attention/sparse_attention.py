@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 from repro.kernels.topl_select.topl_select import vmem
 
 
@@ -114,12 +116,13 @@ def sparse_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
                             causal: bool, window: Optional[int],
                             q_offset: int = 0, kv_map=None,
                             tile_q: int = 256, tile_k: int = 512,
-                            interpret: bool = False) -> jax.Array:
+                            interpret: Optional[bool] = None) -> jax.Array:
     """q: (Gq, nq, dh); k/v/codes_k: (Gk, nk, ...); thresholds: (Gq, nq, 2).
 
     kv_map: callable mapping a q-group index -> kv-group index (GQA);
     identity if None.
     """
+    interpret = resolve_interpret(interpret)
     gq, nq, dh = q.shape
     gk, nk, _ = k.shape
     m = codes_q.shape[-1]
@@ -230,7 +233,8 @@ def sparse_decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
                                    kv_valid: jax.Array, *, scale: float,
                                    sum_rows: bool, heads_per_batch: int,
                                    tile_k: int = 512,
-                                   interpret: bool = False) -> jax.Array:
+                                   interpret: Optional[bool] = None
+                                   ) -> jax.Array:
     """Fused single-token sparse-MHA decode (PQ score -> threshold mask ->
     online-softmax attention) over the KV cache, one pass per key tile.
 
@@ -249,6 +253,7 @@ def sparse_decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
     their MXU work via pl.when.  Memory: O(Tk) VMEM tiles + (R, dh)
     accumulators — no (S,) score row ever reaches HBM.
     """
+    interpret = resolve_interpret(interpret)
     g, r, dh = q.shape
     _, nk, _ = k.shape
     m = codes_q.shape[-1]

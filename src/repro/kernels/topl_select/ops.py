@@ -23,7 +23,7 @@ from repro.kernels.topl_select.topl_select import (
 def topl_thresholds(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
                     max_score: int, causal: bool = True,
                     window: Optional[int] = None, q_offset: int = 0,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     return topl_thresholds_kernel(
         codes_q, codes_k, l=l, max_score=max_score, causal=causal,
         window=window, q_offset=q_offset, interpret=interpret)
@@ -35,7 +35,7 @@ def decode_topl_thresholds(codes_q: jax.Array, codes_k: jax.Array,
                            kv_valid: jax.Array, *, l: int, max_score: int,
                            sum_rows: bool, heads_per_batch: int,
                            tile_k: int = 512,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: Optional[bool] = None) -> jax.Array:
     """Decode-shaped thresholds: (G, R, M) query codes vs (G, S, M) cached
     codes under a (B, S) validity mask -> (G, R_out, 2) [t, need]."""
     return decode_topl_thresholds_kernel(
@@ -49,7 +49,8 @@ def decode_topl_thresholds(codes_q: jax.Array, codes_k: jax.Array,
 def topl_select(codes_q: jax.Array, codes_k: jax.Array, *, l: int,
                 max_score: int, causal: bool = True,
                 window: Optional[int] = None, q_offset: int = 0,
-                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                interpret: Optional[bool] = None
+                ) -> Tuple[jax.Array, jax.Array]:
     """(G, nq, M) x (G, nk, M) -> indices (G, nq, L), valid (G, nq, L)."""
     thr = topl_thresholds(codes_q, codes_k, l=l, max_score=max_score,
                           causal=causal, window=window, q_offset=q_offset,

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _scores(cq, ck):
     """(Tq, M) x (Tk, M) -> (Tq, Tk) int32 match counts (Eq. 6)."""
@@ -78,8 +80,9 @@ def topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array, *,
                            l: int, max_score: int, causal: bool,
                            window: Optional[int], q_offset: int = 0,
                            tile_q: int = 256, tile_k: int = 512,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: Optional[bool] = None) -> jax.Array:
     """codes_q: (G, nq, M); codes_k: (G, nk, M) -> (G, nq, 2) [t, need]."""
+    interpret = resolve_interpret(interpret)
     g, nq, m = codes_q.shape
     _, nk, _ = codes_k.shape
     tq = min(tile_q, nq)
@@ -148,7 +151,8 @@ def decode_topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array,
                                   kv_valid: jax.Array, *, l: int,
                                   max_score: int, sum_rows: bool,
                                   heads_per_batch: int, tile_k: int = 512,
-                                  interpret: bool = False) -> jax.Array:
+                                  interpret: Optional[bool] = None
+                                  ) -> jax.Array:
     """Decode-shaped threshold pass: one query token per group.
 
     codes_q: (G, R, M) — the R query heads sharing one kv head (G = B*Hk);
@@ -164,6 +168,7 @@ def decode_topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array,
     Returns (G, R_out, 2) int32 [threshold bucket, tie budget],
     R_out = 1 if sum_rows else R.
     """
+    interpret = resolve_interpret(interpret)
     g, r, m = codes_q.shape
     _, nk, _ = codes_k.shape
     tk = min(tile_k, nk)

@@ -152,8 +152,16 @@ def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
 
 
 def occupancy(page_table: jax.Array, page_size: int) -> jax.Array:
-    """(B, MP*ps) bool — view row is backed by an allocated page."""
-    return jnp.repeat(page_table >= 0, page_size, axis=1)
+    """(B, MP*ps) bool — view row is backed by an allocated page.
+
+    Broadcast+reshape instead of jnp.repeat: the repeat count is static,
+    so the mask expands with zero data movement (analysis/lint.py bans
+    jnp.repeat in serving/ — on cache-adjacent shapes it materializes the
+    expansion)."""
+    b, mp = page_table.shape
+    alloc = (page_table >= 0)[:, :, None]                 # (B, MP, 1)
+    return jnp.broadcast_to(alloc, (b, mp, page_size)).reshape(
+        b, mp * page_size)
 
 
 def scatter_row(pool: jax.Array, page_table: jax.Array, pos: jax.Array,

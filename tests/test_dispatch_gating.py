@@ -1,0 +1,106 @@
+"""Exhaustive gating matrix for core/dispatch.py's execution-path
+switches.
+
+The four `use_*` switches are the single point deciding whether a layer
+lowers through a Pallas kernel, a jnp fallback, or a paged cache layout.
+The point-checks in the kernel suites each probe a few corners; here the
+FULL cross product of (attn_impl x decode_attn_impl x ffn_impl x
+decode_ffn_impl x kv_layout x REPRO_DISABLE_KERNELS) is asserted against
+an independently-written model of the documented semantics:
+
+  * decode_attn_impl / decode_ffn_impl: explicit "kernel"/"jnp" wins;
+    "auto" follows the train/prefill impl ("pallas" -> kernel);
+  * REPRO_DISABLE_KERNELS=1 forces every jnp fallback...
+  * ...EXCEPT kv_layout: paging is a layout, not a kernel, so the kill
+    switch must NOT flip it (the regression this test exists to catch —
+    a refactor folding use_paged_kv under kernels_disabled() would make
+    the kill switch silently change cache shapes).
+"""
+import itertools
+
+import pytest
+
+from repro import configs
+from repro.core import dispatch
+
+ATTN_IMPLS = ["sparse_jnp", "dense", "pallas"]
+DECODE_ATTN_IMPLS = ["auto", "kernel", "jnp"]
+FFN_IMPLS = ["grouped", "dense", "grouped_shmap", "pallas"]
+DECODE_FFN_IMPLS = ["auto", "kernel", "jnp"]
+KV_LAYOUTS = ["contiguous", "paged"]
+
+
+def _cfg(**spt):
+    return configs.get_smoke("qwen3-0.6b").with_spt(**spt)
+
+
+# --------------------------------------------- independent semantic model
+def want_sparse_decode(attn, decode_attn, disabled):
+    if disabled:
+        return False
+    if decode_attn == "auto":
+        return attn == "pallas"
+    return decode_attn == "kernel"
+
+
+def want_routed_kernel(ffn, disabled):
+    return not disabled and ffn == "pallas"
+
+
+def want_decode_ffn(ffn, decode_ffn, disabled):
+    if disabled:
+        return False
+    if decode_ffn == "auto":
+        return ffn == "pallas"
+    return decode_ffn == "kernel"
+
+
+def want_paged(kv_layout, disabled):
+    del disabled                      # the kill switch must not apply
+    return kv_layout == "paged"
+
+
+# ------------------------------------------------------------ the matrix
+@pytest.mark.parametrize("disabled", [False, True])
+@pytest.mark.parametrize("attn,decode_attn", list(
+    itertools.product(ATTN_IMPLS, DECODE_ATTN_IMPLS)))
+def test_sparse_decode_matrix(monkeypatch, attn, decode_attn, disabled):
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disabled else "0")
+    cfg = _cfg(attn_impl=attn, decode_attn_impl=decode_attn)
+    assert dispatch.use_sparse_decode_kernel(cfg) \
+        == want_sparse_decode(attn, decode_attn, disabled)
+
+
+@pytest.mark.parametrize("disabled", [False, True])
+@pytest.mark.parametrize("ffn,decode_ffn", list(
+    itertools.product(FFN_IMPLS, DECODE_FFN_IMPLS)))
+def test_ffn_matrix(monkeypatch, ffn, decode_ffn, disabled):
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disabled else "0")
+    cfg = _cfg(ffn_impl=ffn, decode_ffn_impl=decode_ffn)
+    assert dispatch.use_routed_ffn_kernel(cfg) \
+        == want_routed_kernel(ffn, disabled)
+    assert dispatch.use_decode_ffn_kernel(cfg) \
+        == want_decode_ffn(ffn, decode_ffn, disabled)
+
+
+@pytest.mark.parametrize("disabled", [False, True])
+@pytest.mark.parametrize("kv_layout", KV_LAYOUTS)
+def test_paged_kv_immune_to_kill_switch(monkeypatch, kv_layout, disabled):
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disabled else "0")
+    cfg = _cfg(kv_layout=kv_layout)
+    assert dispatch.use_paged_kv(cfg) == want_paged(kv_layout, disabled)
+
+
+@pytest.mark.parametrize("value,expect", [
+    ("", False), ("0", False), ("false", False), ("False", False),
+    (" 0 ", False), ("1", True), ("true", True), ("yes", True),
+    ("2", True),
+])
+def test_kill_switch_env_parsing(monkeypatch, value, expect):
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", value)
+    assert dispatch.kernels_disabled() is expect
+
+
+def test_kill_switch_unset(monkeypatch):
+    monkeypatch.delenv("REPRO_DISABLE_KERNELS", raising=False)
+    assert dispatch.kernels_disabled() is False

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.analysis import jaxpr_audit
 from repro.core import dispatch
 from repro.core.params import init_tree
 from repro.models import moe
@@ -85,18 +86,17 @@ def test_moe_decode_kernel_matches_grouped(setup):
 
 def test_moe_decode_builds_no_dispatch_buffer(setup):
     """At (B, 1, d) the decode path must not materialize a (B, E, C, d)
-    capacity buffer — the expert ids index the weight blocks directly."""
+    capacity buffer — the expert ids index the weight blocks directly.
+    Checked through the same analysis helper `python -m repro.analysis`
+    gates CI with (one definition of "dispatch buffer", two enforcers)."""
     cfg, p = setup
     b, e = 4, cfg.num_experts
     x = jnp.zeros((b, 1, cfg.d_model))
     jaxpr = jax.make_jaxpr(lambda x: moe.moe_apply(
         p, x, cfg.with_spt(ffn_impl="pallas"), mode="decode")[0])(x)
-    for eqn in jaxpr.jaxpr.eqns:
-        for v in eqn.outvars:
-            shape = getattr(v.aval, "shape", ())
-            assert not (len(shape) == 4 and shape[0] == b
-                        and shape[1] == e), \
-                f"dispatch-shaped intermediate {shape} in MoE decode"
+    assert jaxpr_audit.dispatch_buffer_violations(
+        jaxpr, batch=b, groups=e, entry="moe.decode") == []
+    assert jaxpr_audit.pallas_call_count(jaxpr) > 0
 
 
 def test_moe_kill_switch(setup, monkeypatch):
@@ -106,7 +106,8 @@ def test_moe_kill_switch(setup, monkeypatch):
     monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1")
     jaxpr = jax.make_jaxpr(
         lambda x: moe.moe_apply(p, x, ck, mode="train")[0])(x)
-    assert "pallas_call" not in str(jaxpr)
+    assert jaxpr_audit.kernel_count_violations(jaxpr, "moe.kill-switch",
+                                               "none") == []
     yd, _ = moe.moe_apply(p, x, ck, mode="train")
     monkeypatch.setenv("REPRO_DISABLE_KERNELS", "0")
     yr, _ = moe.moe_apply(p, x, cfg, mode="train")

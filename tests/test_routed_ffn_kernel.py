@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.analysis import jaxpr_audit
 from repro.core import dispatch
 from repro.core import lora as lora_mod
 from repro.core import routed_ffn as rf
@@ -163,13 +164,13 @@ def test_decode_path_builds_no_dispatch_buffer():
     jaxpr = jax.make_jaxpr(
         lambda x: rffn_ops.routed_ffn_decode(x, p, rcfg, lcfg,
                                              interpret=True)[0])(x)
-    g = rcfg.num_groups
-    for eqn in jaxpr.jaxpr.eqns:
-        for v in eqn.outvars:
-            shape = getattr(v.aval, "shape", ())
-            assert not (len(shape) == 4 and shape[0] == b
-                        and shape[1] == g), \
-                f"dispatch-shaped intermediate {shape} in decode path"
+    # the same analysis helper python -m repro.analysis gates CI with:
+    # one definition of "dispatch buffer", two enforcers — and it walks
+    # nested jaxprs (pjit bodies), unlike the old top-level eqn loop
+    assert jaxpr_audit.dispatch_buffer_violations(
+        jaxpr, batch=b, groups=rcfg.num_groups,
+        entry="routed_ffn.decode") == []
+    assert jaxpr_audit.pallas_call_count(jaxpr) > 0
 
 
 # ------------------------------------------------------- dispatch gating
@@ -204,7 +205,9 @@ def test_decode_ffn_impl_jnp_overrides_pallas():
     x = jax.random.normal(jax.random.PRNGKey(7), (2, 1, 64))
     jaxpr = jax.make_jaxpr(
         lambda x: ffn.ffn_apply(p, x, cfg, mode="decode")[0])(x)
-    assert "pallas_call" not in str(jaxpr), "decode still lowers via Pallas"
+    assert jaxpr_audit.kernel_count_violations(
+        jaxpr, "ffn.decode-jnp-override", "none") == [], \
+        "decode still lowers via Pallas"
     y, _ = ffn.ffn_apply(p, x, cfg, mode="decode")
     yg, _ = ffn.ffn_apply(p, x, cfg.with_spt(ffn_impl="grouped"),
                           mode="decode")

@@ -22,6 +22,7 @@ from repro.core.params import init_tree
 from repro.kernels.sparse_attention.ops import sparse_mha_decode as k_decode
 from repro.kernels.topl_select.ops import decode_topl_thresholds
 from repro.kernels.topl_select.ref import decode_thresholds_ref
+from repro.models import transformer
 from repro.serving.engine import Engine, Request
 from repro.train.state import model_defs
 
@@ -188,15 +189,32 @@ def test_disable_kernels_env(monkeypatch):
 
 
 # ------------------------------------------------------------ engine e2e
+def _replay_last_logits(params, cfg, tokens, max_len):
+    """f32 logits after `tokens` via a batch-1 exact-length ragged
+    prefill (the decode paths under test are not involved)."""
+    batch = {"tokens": jnp.asarray(np.asarray(tokens, np.int32)[None, :])}
+    lengths = jnp.asarray([len(tokens)], jnp.int32)
+    _, logits = transformer.lm_prefill_ragged(params, cfg, batch, lengths,
+                                              max_len)
+    return np.asarray(logits[0, -1], np.float32)
+
+
 def test_engine_greedy_identical_kernel_on_vs_off():
     """The compiled lax.while_loop decode chunk traces the fused kernel
     (per-slot positions + engine-tracked validity); greedy completions must
-    be identical to the jnp decode path."""
+    be identical to the jnp decode path — except across a genuine argmax
+    near-tie, where either token is a correct greedy output."""
     # fp32 model AND params: the kernel and the jnp gather path accumulate
     # in different orders (~1e-6 apart in f32); bf16 weights amplify that
     # to a full bf16 ulp per layer, which can legitimately flip a
     # near-tied greedy argmax.  All-f32 keeps the paths within float noise
-    # so the token streams must match exactly.
+    # so the token streams must match exactly — unless the top-2 logits
+    # are themselves within float noise of each other.  That near-tie is
+    # data-dependent (it moves with jax's per-version RNG streams), so at
+    # the first divergence we replay the context and accept EITHER token
+    # iff both logits sit within tolerance of the max; the rest of that
+    # row's stream is then conditioned on a different prefix and is not
+    # comparable.
     base = dataclasses.replace(
         configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
         num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
@@ -215,7 +233,19 @@ def test_engine_greedy_identical_kernel_on_vs_off():
         assert dispatch.use_sparse_decode_kernel(cfg) == (impl == "kernel")
         eng = Engine(cfg, params, max_len=32, num_slots=2, decode_chunk=4)
         outs[impl] = [c.tokens for c in eng.run(reqs)]
-    assert outs["kernel"] == outs["jnp"]
+    for row, (req, got_k, got_j) in enumerate(
+            zip(reqs, outs["kernel"], outs["jnp"])):
+        if got_k == got_j:
+            continue
+        t = next(i for i, (a, b) in enumerate(zip(got_k, got_j)) if a != b)
+        ctx = list(req.tokens) + got_j[:t]    # common prefix by choice of t
+        lg = _replay_last_logits(params, base, ctx, max_len=32)
+        top = float(lg.max())
+        gap = max(top - float(lg[got_k[t]]), top - float(lg[got_j[t]]))
+        assert gap <= 1e-3, (
+            f"row {row} diverged at step {t} with a real logit gap "
+            f"{gap:.3e} (tokens {got_k[t]} vs {got_j[t]}): kernel path "
+            "disagrees with the jnp oracle beyond a near-tie")
 
 
 # ------------------------------------------------------------ slow sweep
