@@ -1,30 +1,45 @@
 """Decode sparse-attention benchmark: jnp gather fallback vs the fused
-decode formulation, swept over (S, top_fraction, GQA heads).
+decode formulation, plus the Pallas kernel tiers (one-pass fused vs the
+two-pass threshold+attention pair, and paged kernel-native vs gathered
+view), swept over (S, top_fraction, GQA heads).
 
     PYTHONPATH=src python -m benchmarks.decode_attention \
-        [--pallas] [--out BENCH_decode.json]
+        [--out BENCH_decode.json]
 
 Implementations timed per row (all selection-identical; see
 tests/test_sparse_decode.py):
 
-  jnp    — sa.sparse_mha_decode: the serving fallback (bucket_select index
-           emission + grouped gather attention; GQA reshape form, no
-           cache repeats)
-  fused  — sa.sparse_mha_decode_masked: the fused-kernel-equivalent masked
-           execution (threshold histogram -> mask on grouped dense logits;
-           no index compaction, no gather).  On a non-TPU device this is
-           the XLA-executable stand-in for the Pallas kernel's compute
-           graph, the same convention as benchmarks/table5_kernels.py —
-           the real kernel additionally skips ineligible key tiles and
-           keeps the (S,) score row in VMEM.
-  pallas — kernels/sparse_attention/ops.sparse_mha_decode.  Off-TPU it
-           runs interpret=True, a CORRECTNESS mode orders of magnitude off
-           hardware speed, so it is gated behind --pallas and its timing
-           is never a speed claim on CPU.
+  jnp      — sa.sparse_mha_decode: the serving fallback (bucket_select
+             index emission + grouped gather attention; GQA reshape form,
+             no cache repeats)
+  fused    — sa.sparse_mha_decode_masked: the fused-kernel-equivalent
+             masked execution (threshold histogram -> mask on grouped
+             dense logits; no index compaction, no gather).  On a non-TPU
+             device this is the XLA-executable stand-in for the Pallas
+             kernel's compute graph, the same convention as
+             benchmarks/table5_kernels.py.
+  onepass  — kernels ops.sparse_mha_decode fuse=True: ONE pallas_call
+             whose grid prepends a histogram prologue (tiles 0..nkt-1)
+             to the attention sweep (tiles nkt..2nkt-1); the (G, R, 2)
+             thresholds tensor never exists in HBM.
+  twopass  — the same op fuse=False: decode_topl_thresholds kernel, HBM
+             thresholds round-trip, then the attention kernel (the
+             bisection/fallback tier).
+  paged    — ops.sparse_mha_decode_paged (kernel-native (page_id, offset)
+             addressing through a scalar-prefetched page table) vs
+             gather_pages + the fused kernel over the gathered view, on
+             the s==2048 qhead rows.
+
+Off-TPU the kernel tiers run interpret=True — a correctness mode orders
+of magnitude off hardware speed, so their absolute us are never a speed
+claim on CPU; the tier-vs-tier RATIOS are the tracked signal (both sides
+pay identical interpreter overhead per grid step, so fewer dispatches +
+no HBM round-trip shows up as ratio > 1).
 
 Emits one JSON line per row and writes the aggregate to --out
 (committed as BENCH_decode.json at the repo root: the decode-throughput
-trajectory baseline tracked per PR).
+trajectory baseline tracked per PR; scripts/bench_floors.json records
+floors over the ratio columns).
 """
 import argparse
 import json
@@ -37,10 +52,22 @@ from repro.core import pq
 from repro.core import sparse_attention as sa
 from repro.core.params import init_tree
 from repro.kernels.sparse_attention import ops as sa_ops
+from repro.serving import kv_pages as kvp
+
+PAGE_SIZE = 256
+
+
+def _to_pool(x: jax.Array, ps: int) -> jax.Array:
+    """(B, Hk, MP*ps, .) contiguous cache -> (B*MP, Hk, ps, .) pool whose
+    identity page table reproduces it exactly (bit-comparable views)."""
+    b, hk, s, last = x.shape
+    mp = s // ps
+    return (x.reshape(b, hk, mp, ps, last)
+            .transpose(0, 2, 1, 3, 4).reshape(b * mp, hk, ps, last))
 
 
 def bench_row(s: int, frac: float, hq: int, hk: int, gran: str, *,
-              b: int = 4, d: int = 64, run_pallas: bool = False) -> dict:
+              b: int = 4, d: int = 64, run_paged: bool = False) -> dict:
     pcfg = pq.PQConfig(head_dim=d, code_dim=8, num_codewords=16)
     cb = init_tree(pq.param_defs(pcfg), jax.random.PRNGKey(0))["codebooks"]
     scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=frac, min_l=16,
@@ -52,34 +79,54 @@ def bench_row(s: int, frac: float, hq: int, hk: int, gran: str, *,
     codes = pq.assign(k, cb).astype(jnp.int8)
     kv_valid = jnp.ones((b, s), bool)
     scale = d ** -0.5
+    interp = jax.devices()[0].platform != "tpu"
 
     f_jnp = jax.jit(lambda q, k, v, c, kv: sa.sparse_mha_decode(
         q, k, v, c, cb, scfg, scale, kv))
     f_fused = jax.jit(lambda q, k, v, c, kv: sa.sparse_mha_decode_masked(
         q, k, v, c, cb, scfg, scale, kv))
+    f_one = lambda q, k, v, c, kv: sa_ops.sparse_mha_decode(
+        q, k, v, c, cb, scfg, scale, kv, interpret=interp, fuse=True)
+    f_two = lambda q, k, v, c, kv: sa_ops.sparse_mha_decode(
+        q, k, v, c, cb, scfg, scale, kv, interpret=interp, fuse=False)
     row = {
         "s": s, "l": sa.top_l(s, scfg, None), "frac": frac, "hq": hq,
         "hk": hk, "granularity": gran, "batch": b, "head_dim": d,
         "jnp_us": round(time_fn(f_jnp, q, k, v, codes, kv_valid), 1),
         "fused_us": round(time_fn(f_fused, q, k, v, codes, kv_valid), 1),
+        "onepass_us": round(time_fn(f_one, q, k, v, codes, kv_valid,
+                                    iters=3, warmup=1), 1),
+        "twopass_us": round(time_fn(f_two, q, k, v, codes, kv_valid,
+                                    iters=3, warmup=1), 1),
+        "kernel_interpret": interp,
     }
     row["fused_speedup"] = round(row["jnp_us"] / row["fused_us"], 2)
-    if run_pallas:
-        interp = jax.devices()[0].platform != "tpu"
-        f_pl = lambda q, k, v, c, kv: sa_ops.sparse_mha_decode(
-            q, k, v, c, cb, scfg, scale, kv, interpret=interp)
-        row["pallas_us"] = round(
-            time_fn(f_pl, q, k, v, codes, kv_valid, iters=3, warmup=1), 1)
-        row["pallas_interpret"] = interp
+    row["onepass_speedup"] = round(row["twopass_us"] / row["onepass_us"], 2)
+    if run_paged:
+        ps = PAGE_SIZE
+        ptk = ps // 2       # both routes pair tiles -> one-page-wide blocks
+        kp, vp, cp = (_to_pool(x, ps) for x in (k, v, codes))
+        pt = jnp.arange(b * (s // ps), dtype=jnp.int32).reshape(b, s // ps)
+        f_native = lambda q, kv: sa_ops.sparse_mha_decode_paged(
+            q, kp, vp, cp, cb, scfg, scale, kv, pt, tile_k=ptk,
+            interpret=interp)
+        f_gather = lambda q, kv: sa_ops.sparse_mha_decode(
+            q, kvp.gather_pages(kp, pt), kvp.gather_pages(vp, pt),
+            kvp.gather_pages(cp, pt), cb, scfg, scale, kv, tile_k=ptk,
+            interpret=interp, fuse=True)
+        row["page_size"] = ps
+        row["paged_native_us"] = round(
+            time_fn(f_native, q, kv_valid, iters=5, warmup=1), 1)
+        row["paged_gather_us"] = round(
+            time_fn(f_gather, q, kv_valid, iters=5, warmup=1), 1)
+        row["paged_native_speedup"] = round(
+            row["paged_gather_us"] / row["paged_native_us"], 2)
     return row
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_decode.json")
-    ap.add_argument("--pallas", action="store_true",
-                    help="also time the Pallas kernel (interpret mode off-"
-                         "TPU: correctness only, not a speed signal)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seqs", type=int, nargs="*",
                     default=[512, 2048, 8192])
@@ -88,15 +135,19 @@ def main():
     platform = jax.devices()[0].platform
     note = ("fused == sparse_mha_decode_masked, the kernel-equivalent XLA "
             "execution (table5 convention: the CPU/GPU stand-in for the "
-            "Pallas decode kernel; on TPU, time the kernel itself with "
-            "--pallas).  jnp == the gather fallback serving default.")
+            "Pallas decode kernel).  jnp == the gather fallback serving "
+            "default.  onepass/twopass == the Pallas kernel tiers "
+            "(interpret-timed off-TPU: only their ratio is a signal).  "
+            "paged == kernel-native page addressing vs gathered view, "
+            "s==2048 qhead rows.")
     rows = []
     sweeps = [(s, 0.125, 8, 2, g) for s in args.seqs for g in ("qhead",
                                                                "kvgroup")]
     sweeps += [(2048, 0.125, 8, 8, "qhead"), (2048, 0.25, 8, 2, "qhead")]
     for s, frac, hq, hk, gran in sweeps:
         row = bench_row(s, frac, hq, hk, gran, b=args.batch,
-                        run_pallas=args.pallas and s == min(args.seqs))
+                        run_paged=(s == 2048 and gran == "qhead"
+                                   and s % PAGE_SIZE == 0))
         rows.append(row)
         print(json.dumps(row))
     out = {"bench": "decode_attention", "device": platform, "note": note,

@@ -2,13 +2,15 @@
 # Fast CI smoke subset: skips tests marked `slow` (multi-arch smokes,
 # end-to-end training, and the wide kernel interpret sweeps) so builders
 # can iterate in a few minutes.  The Pallas kernel paths ARE exercised
-# here: tests/test_sparse_decode.py's parity cases run the fused decode
-# kernels under interpret=True on CPU (only the (S, L, dtype) sweep is
+# here: tests/test_sparse_decode.py's parity cases run the decode
+# kernel tiers under interpret=True on CPU — one-pass fused ==
+# two-pass == jnp oracle — (only the (S, L, dtype) sweep is
 # `slow`), tests/test_routed_ffn_kernel.py runs the fused routed-FFN
 # grouped/decode kernels the same way (incl. the engine-level greedy
 # kernel-on == kernel-off check), and tests/test_moe_kernel.py covers
 # the MoE reuse of those kernels.  The paged-KV-cache suite
-# (tests/test_kv_paging.py: allocator units + engine-level paged ==
+# (tests/test_kv_paging.py: allocator units + kernel-native paged
+# decode == gathered view bit-identity + engine-level paged ==
 # contiguous row-identity incl. the sparse decode kernel) is fast except
 # the wide (page_size x variant) sweep, which is `slow`.  The
 # disaggregated-prefill suite (tests/test_prefill_scheduler.py: batched

@@ -12,6 +12,10 @@ eqn.  Rules (stable ids tests key on):
   jaxpr.cache-repeat        a decode attention path materializes a
                             (B, Hq, S, ·) tensor with Hq > Hk — the GQA
                             cache was expanded instead of packed
+  jaxpr.paged-gather        a paged decode chunk materializes a gathered
+                            per-slot (B, Hk, S, ·) view of the KV pool —
+                            the kernel-native route reads (page_id,
+                            offset) tiles directly
   jaxpr.intermediate-budget an eqn output exceeds the entry's byte budget
                             (default: 1.5x the largest input/param leaf)
   jaxpr.forbidden-primitive host callbacks / prints inside a hot path
@@ -124,6 +128,34 @@ def cache_repeat_violations(jaxpr, num_q_heads: int, num_kv_heads: int,
                     f"{eqn.primitive.name} expands a cache to "
                     f"{tuple(shape)} (Hq={num_q_heads} > Hk="
                     f"{num_kv_heads}, S>={min_seq})"))
+    return out
+
+
+def paged_gather_violations(jaxpr, batch: int, num_kv_heads: int,
+                            view: int, page_size: int, max_pages: int,
+                            entry: str = "jaxpr") -> List[Violation]:
+    """A (B, Hk, >=view, ·) — or pre-transpose (B, MP, Hk, ps, ·) —
+    intermediate inside a paged decode chunk is a materialized per-slot
+    gather of the KV pool: the kernel-native route addresses (page_id,
+    offset) tiles straight from the pool and must never build one.
+    (The MP dim in the 5-d form is required so layer-stacked pool
+    carries (L, P, Hk, ps, ·) of scan/while bodies don't alias it.)"""
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        for v, shape in _out_shapes(eqn):
+            gathered = (len(shape) == 4 and shape[0] == batch
+                        and shape[1] == num_kv_heads
+                        and isinstance(shape[2], int) and shape[2] >= view)
+            pre_t = (len(shape) == 5 and shape[0] == batch
+                     and shape[1] == max_pages
+                     and shape[2] == num_kv_heads and shape[3] == page_size)
+            if gathered or pre_t:
+                out.append(Violation(
+                    "jaxpr.paged-gather", entry,
+                    f"{eqn.primitive.name} materializes a gathered "
+                    f"per-slot KV view {tuple(shape)} (B={batch}, "
+                    f"Hk={num_kv_heads}, view={view}) in a paged decode "
+                    "chunk"))
     return out
 
 
@@ -267,7 +299,8 @@ def _lm_params(cfg):
 def _engine_chunk_jaxpr(cfg, slots: int = 2, max_gen: int = 4,
                         max_len: int = 32):
     """Trace the engine's compiled greedy decode chunk exactly as
-    ``Engine.run`` builds it (contiguous layout placeholders)."""
+    ``Engine.run`` builds it (contiguous or paged placeholders, following
+    the config's kv_layout)."""
     from repro.serving import kv_pages as kvp
     from repro.serving.engine import Engine, abstract_decode_caches
 
@@ -275,9 +308,16 @@ def _engine_chunk_jaxpr(cfg, slots: int = 2, max_gen: int = 4,
     eng = Engine(cfg, params, max_len=max_len, jit=False,
                  num_slots=slots, decode_chunk=4)
     chunk = eng._get_chunk(slots, max_gen, greedy=True, eos_id=None)
-    caches = abstract_decode_caches(cfg, slots, max_len)
-    page_table = _abstract(kvp.init_page_table(slots, 1))
-    astate = _abstract(kvp.init_state(1))
+    if eng._paged:
+        caches = abstract_decode_caches(cfg, slots, max_len,
+                                        kv_pages=eng.kv_pages)
+        page_table = _abstract(
+            kvp.init_page_table(slots, eng.max_pages_per_slot))
+        astate = _abstract(kvp.init_state(eng.kv_pages))
+    else:
+        caches = abstract_decode_caches(cfg, slots, max_len)
+        page_table = _abstract(kvp.init_page_table(slots, 1))
+        astate = _abstract(kvp.init_state(1))
     i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
     f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
     args = (params, caches, page_table, astate,
@@ -352,17 +392,11 @@ def _audit_prefill_ragged() -> List[Violation]:
             + accum_dtype_violations(jaxpr, entry))
 
 
-@hot_entrypoint("ops.sparse_mha_decode")
-def _audit_sparse_mha_decode() -> List[Violation]:
-    """The fused decode attention op at serving-representative shape:
-    exactly two kernels (decode thresholds + decode attention), nothing
-    bigger than the V cache, and no GQA expansion."""
+def _sparse_decode_operands():
     from repro.core import pq
     from repro.core import sparse_attention as sa
     from repro.core.params import init_tree
-    from repro.kernels.sparse_attention import ops as sa_ops
 
-    entry = "ops.sparse_mha_decode"
     b, hq, hk, s, d, m = 4, 8, 2, 256, 64, 8
     pcfg = pq.PQConfig(head_dim=d, code_dim=m, num_codewords=16)
     cb = jax.eval_shape(lambda: init_tree(
@@ -372,9 +406,45 @@ def _audit_sparse_mha_decode() -> List[Violation]:
     q, k, v = f32(b, hq, 1, d), f32(b, hk, s, d), f32(b, hk, s, d)
     codes = jax.ShapeDtypeStruct((b, hk, s, d // m), jnp.int8)
     kv_valid = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+    return (b, hq, hk, s, d), scfg, cb, q, k, v, codes, kv_valid
+
+
+@hot_entrypoint("ops.sparse_mha_decode")
+def _audit_sparse_mha_decode() -> List[Violation]:
+    """The one-pass decode attention op at serving-representative shape:
+    exactly ONE kernel (histogram prologue + attention in a single
+    pallas_call — the thresholds tensor never reaches HBM), nothing bigger
+    than the V cache, and no GQA expansion."""
+    from repro.kernels.sparse_attention import ops as sa_ops
+
+    entry = "ops.sparse_mha_decode[fused]"
+    (b, hq, hk, s, d), scfg, cb, q, k, v, codes, kv_valid = \
+        _sparse_decode_operands()
     jaxpr = jax.make_jaxpr(
         lambda q, k, v, c, cb, kv: sa_ops.sparse_mha_decode(
-            q, k, v, c, cb, scfg, d ** -0.5, kv, interpret=True)
+            q, k, v, c, cb, scfg, d ** -0.5, kv, interpret=True, fuse=True)
+    )(q, k, v, codes, cb, kv_valid)
+    return (kernel_count_violations(jaxpr, entry, "exact", exact=1)
+            + forbidden_primitive_violations(jaxpr, entry)
+            + cache_repeat_violations(jaxpr, hq, hk, s, entry)
+            + big_intermediate_violations(
+                jaxpr, auto_budget((q, k, v, codes, cb)), entry)
+            + accum_dtype_violations(jaxpr, entry))
+
+
+@hot_entrypoint("ops.sparse_mha_decode_two_pass")
+def _audit_sparse_mha_decode_two_pass() -> List[Violation]:
+    """The bisection tier: fuse=False still lowers the original
+    threshold + attention kernel pair (exactly two pallas_calls), with
+    the same byte/shape discipline."""
+    from repro.kernels.sparse_attention import ops as sa_ops
+
+    entry = "ops.sparse_mha_decode[two-pass]"
+    (b, hq, hk, s, d), scfg, cb, q, k, v, codes, kv_valid = \
+        _sparse_decode_operands()
+    jaxpr = jax.make_jaxpr(
+        lambda q, k, v, c, cb, kv: sa_ops.sparse_mha_decode(
+            q, k, v, c, cb, scfg, d ** -0.5, kv, interpret=True, fuse=False)
     )(q, k, v, codes, cb, kv_valid)
     return (kernel_count_violations(jaxpr, entry, "exact", exact=2)
             + forbidden_primitive_violations(jaxpr, entry)
@@ -382,6 +452,35 @@ def _audit_sparse_mha_decode() -> List[Violation]:
             + big_intermediate_violations(
                 jaxpr, auto_budget((q, k, v, codes, cb)), entry)
             + accum_dtype_violations(jaxpr, entry))
+
+
+@hot_entrypoint("engine.decode_chunk_paged")
+def _audit_decode_chunk_paged() -> List[Violation]:
+    """Paged layout with the kernel tier on: the decode chunk must read
+    the KV pool kernel-natively — no gathered per-slot (B, Hk, view, ·)
+    view (or its pre-transpose 5-d form) anywhere in the chunk, and no
+    intermediate bigger than the pool itself."""
+    entry = "engine.decode_chunk[paged-native]"
+    cfg = _tiny_lm_cfg(decode_attn_impl="kernel", attn_impl="pallas",
+                       ffn_impl="pallas", kv_layout="paged",
+                       kv_page_size=16)
+    slots, max_len = 2, 32
+    jaxpr, params, caches, _ = _engine_chunk_jaxpr(cfg, slots=slots,
+                                                   max_len=max_len)
+    ps = cfg.spt.kv_page_size
+    from repro.serving import kv_pages as kvp
+    view = kvp.view_len(max_len, ps)
+    out = []
+    out += forbidden_primitive_violations(jaxpr, entry)
+    out += kernel_count_violations(jaxpr, entry, "some")
+    out += paged_gather_violations(jaxpr, slots, cfg.num_kv_heads, view,
+                                   ps, kvp.num_pages(max_len, ps), entry)
+    out += cache_repeat_violations(jaxpr, cfg.num_heads, cfg.num_kv_heads,
+                                   view, entry)
+    out += big_intermediate_violations(jaxpr, auto_budget(params, caches),
+                                       entry)
+    out += accum_dtype_violations(jaxpr, entry)
+    return out
 
 
 @hot_entrypoint("ops.routed_ffn_decode")

@@ -27,6 +27,13 @@ traced artifact:
                          routes exclusively through core/dispatch.py's
                          ``use_*_kernel`` switches, and the kernel
                          wrappers own every pallas_call.
+  lint.paged-gather      models/ + serving/ must not call
+                         ``gather_pages`` — kernel-native page indexing
+                         reads (page_id, offset) tiles straight from the
+                         pool, so a per-step gather of the per-slot view
+                         must never creep back onto the decode hot path
+                         (models/paged_fallback.py, the designated
+                         gathered-view fallback tier, is exempt).
 
 Each rule is (id, applies-to-path predicate, AST checker) in ``RULES`` —
 adding a rule is appending a tuple.  ``lint_source`` lints one buffer
@@ -146,6 +153,24 @@ def _check_dispatch_routing(rel: str, tree: ast.AST) -> List[Violation]:
     return out
 
 
+def _check_paged_gather(rel: str, tree: ast.AST) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        named = (isinstance(fn, ast.Name) and fn.id == "gather_pages")
+        attred = (isinstance(fn, ast.Attribute)
+                  and fn.attr == "gather_pages")
+        if named or attred:
+            out.append(Violation(
+                "lint.paged-gather", f"{rel}:{node.lineno}",
+                "gather_pages in models//serving/ — decode reads the KV "
+                "pool kernel-natively (scalar-prefetched page table); "
+                "gathered views live only in models/paged_fallback.py"))
+    return out
+
+
 RULES: List[Tuple[str, Callable[[str], bool],
                   Callable[[str, ast.AST], List[Violation]]]] = [
     ("lint.jnp-repeat", _in("models", "serving"), _check_jnp_repeat),
@@ -153,11 +178,16 @@ RULES: List[Tuple[str, Callable[[str], bool],
     ("lint.interpret-default", _in("kernels"), _check_interpret_default),
     ("lint.dispatch-routing", _in("models", "serving"),
      _check_dispatch_routing),
+    ("lint.paged-gather", _in("models", "serving"), _check_paged_gather),
 ]
 
 # serving/engine.py is the host scheduler: np mirrors of slot state are
-# its job.  Nothing else is exempt from anything.
-EXEMPT = {("lint.host-sync", "serving/engine.py")}
+# its job.  models/paged_fallback.py is the designated gathered-view
+# fallback tier for paged decode (jnp oracle / kill switch / bisection) —
+# the one place a per-slot gather is allowed.  Nothing else is exempt
+# from anything.
+EXEMPT = {("lint.host-sync", "serving/engine.py"),
+          ("lint.paged-gather", "models/paged_fallback.py")}
 
 
 def lint_source(source: str, rel: str) -> List[Violation]:

@@ -237,19 +237,63 @@ def _entry_sparse_prefill() -> List[Violation]:
 
 @kernel_entry("sparse_attention.decode")
 def _entry_sparse_decode() -> List[Violation]:
+    """Both decode tiers at serving scale: the fused one-pass kernel
+    (histogram scratch rides the same grid — nothing prefetched) and the
+    two-pass bisection pair."""
     from repro.core import sparse_attention as sa
     from repro.kernels.sparse_attention import ops as sa_ops
-    entry = "kernels.sparse_mha_decode[b4 h8/2 s1024 d64]"
     b, hq, hk, s, d, m = 4, 8, 2, 1024, 64, 8
     pcfg, cb = _pq_setup(d, m)
     scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=8)
+    args = (_f32(b, hq, 1, d), _f32(b, hk, s, d), _f32(b, hk, s, d),
+            jax.ShapeDtypeStruct((b, hk, s, d // m), jnp.int8), cb,
+            jax.ShapeDtypeStruct((b, s), jnp.bool_))
+    out = []
+    for fuse, tag in ((True, "fused"), (False, "two-pass")):
+        entry = f"kernels.sparse_mha_decode[{tag} b4 h8/2 s1024 d64]"
+        calls = collect_pallas_calls(
+            lambda q, k, v, c, cb, kv: sa_ops.sparse_mha_decode(
+                q, k, v, c, cb, scfg, d ** -0.5, kv, interpret=True,
+                fuse=fuse), *args)
+        out += audit_calls(calls, entry)
+        want = 1 if fuse else 2
+        if len(calls) != want:
+            out.append(Violation(
+                "pallas.no-kernel", entry,
+                f"expected {want} pallas_call(s), traced {len(calls)}"))
+    return out
+
+
+@kernel_entry("sparse_attention.decode_paged")
+def _entry_sparse_decode_paged() -> List[Violation]:
+    """Kernel-native paged decode: sparse and dense kernels must each
+    prefetch exactly ONE scalar operand (the clamped page table driving
+    the pool index_maps), tile within page bounds, and stay inside the
+    VMEM budget at serving-scale page counts."""
+    from repro.core import sparse_attention as sa
+    from repro.kernels.sparse_attention import ops as sa_ops
+    b, hq, hk, d, m = 4, 8, 2, 64, 8
+    ps, mp, pool = 128, 8, 64                 # view 1024 rows/slot
+    pcfg, cb = _pq_setup(d, m)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=8)
+    pt = jax.ShapeDtypeStruct((b, mp), jnp.int32)
+    kvv = jax.ShapeDtypeStruct((b, mp * ps), jnp.bool_)
+    entry = f"kernels.sparse_mha_decode_paged[b4 h8/2 ps{ps} mp{mp} d64]"
     calls = collect_pallas_calls(
-        lambda q, k, v, c, cb, kv: sa_ops.sparse_mha_decode(
-            q, k, v, c, cb, scfg, d ** -0.5, kv, interpret=True),
-        _f32(b, hq, 1, d), _f32(b, hk, s, d), _f32(b, hk, s, d),
-        jax.ShapeDtypeStruct((b, hk, s, d // m), jnp.int8), cb,
-        jax.ShapeDtypeStruct((b, s), jnp.bool_))
-    return audit_calls(calls, entry)
+        lambda q, k, v, c, cb, kv, pt: sa_ops.sparse_mha_decode_paged(
+            q, k, v, c, cb, scfg, d ** -0.5, kv, pt, interpret=True),
+        _f32(b, hq, 1, d), _f32(pool, hk, ps, d), _f32(pool, hk, ps, d),
+        jax.ShapeDtypeStruct((pool, hk, ps, d // m), jnp.int8), cb,
+        kvv, pt)
+    out = audit_calls(calls, entry, prefetch={"sparse_attention.py": 1})
+    entry_d = f"kernels.dense_mha_decode_paged[b4 h8/2 ps{ps} mp{mp} d64]"
+    calls_d = collect_pallas_calls(
+        lambda q, k, v, kv, pt: sa_ops.dense_mha_decode_paged(
+            q, k, v, d ** -0.5, kv, pt, interpret=True),
+        _f32(b, hq, 1, d), _f32(pool, hk, ps, d), _f32(pool, hk, ps, d),
+        kvv, pt)
+    out += audit_calls(calls_d, entry_d, prefetch={"sparse_attention.py": 1})
+    return out
 
 
 @kernel_entry("routed_ffn.grouped")

@@ -34,6 +34,18 @@ class SPTConfig:
     # kernel, "jnp" = sa.sparse_mha_decode fallback, "auto" = follow
     # attn_impl ("pallas" -> kernel).  REPRO_DISABLE_KERNELS=1 forces jnp.
     decode_attn_impl: str = "auto"  # auto | kernel | jnp
+    # kernel-tier shape of that decode path: "fused" = one-pass kernel
+    # (threshold histogram as a prologue phase of the attention grid, no
+    # thresholds tensor in HBM), "two_pass" = the original threshold +
+    # attention kernel pair (bisection/fallback tier, bit-identical
+    # output), "auto" = fused.  Only consulted when the kernel tier is on.
+    decode_attn_fuse: str = "auto"  # auto | fused | two_pass
+    # paged-pool decode addressing: "kernel" = decode kernels read K/V/code
+    # tiles straight from the page pools via a scalar-prefetched page
+    # table (no gathered per-slot view), "gather" = materialize the
+    # gathered view first (fallback tier), "auto" = follow the decode
+    # attention kernel tier.  REPRO_DISABLE_KERNELS=1 forces gather.
+    kv_paged_native: str = "auto"   # auto | kernel | gather
     # routed FFN (§4.2): G groups, G' active (beta = G'/G)
     ffn_groups: int = 8
     ffn_active_groups: int = 4

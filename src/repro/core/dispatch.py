@@ -165,6 +165,43 @@ def use_sparse_decode_kernel(cfg) -> bool:
     return impl == "kernel"
 
 
+def use_fused_decode_attn(cfg) -> bool:
+    """Within the sparse-decode kernel tier, should the ONE-PASS fused
+    kernel run (threshold histogram as a prologue phase of the attention
+    grid) instead of the two-pass threshold + attention kernel pair?
+
+    cfg is a ModelConfig (duck-typed).  spt.decode_attn_fuse: "fused" |
+    "two_pass" | "auto" (auto = fused; two_pass is the bisection tier —
+    both produce bit-identical output).  Only consulted when
+    use_sparse_decode_kernel(cfg) already said yes, so the kill switch
+    needs no separate handling here.
+    """
+    mode = getattr(cfg.spt, "decode_attn_fuse", "auto")
+    if mode == "auto":
+        return True
+    return mode == "fused"
+
+
+def use_paged_native_decode(cfg) -> bool:
+    """Should paged-pool decode attention address K/V/code tiles straight
+    from the page pools (scalar-prefetched page table in the kernels'
+    BlockSpec index_maps) instead of materializing a gathered per-slot
+    (B, Hk, S, .) view first?
+
+    cfg is a ModelConfig (duck-typed).  spt.kv_paged_native: "kernel" |
+    "gather" | "auto" (auto follows the decode attention kernel tier:
+    native iff attn_impl == "pallas").  Unlike the layout switch
+    (use_paged_kv) this IS a kernel decision, so REPRO_DISABLE_KERNELS=1
+    forces the gathered-view fallback.
+    """
+    if kernels_disabled():
+        return False
+    impl = getattr(cfg.spt, "kv_paged_native", "auto")
+    if impl == "auto":
+        return cfg.spt.attn_impl == "pallas"
+    return impl == "kernel"
+
+
 def use_routed_ffn_kernel(cfg) -> bool:
     """Should train/prefill routed FFN lower through the fused Pallas
     grouped-GEMM kernel (in-kernel scalar-prefetch dispatch)?

@@ -23,7 +23,9 @@ from repro.core import sparse_attention as sa
 from repro.kernels import resolve_interpret
 from repro.kernels.pq_quantize.ops import pq_assign
 from repro.kernels.sparse_attention.sparse_attention import (
-    sparse_attention_kernel, sparse_decode_attention_kernel)
+    dense_decode_attention_paged_kernel, fused_sparse_decode_attention_kernel,
+    fused_sparse_decode_attention_paged_kernel, sparse_attention_kernel,
+    sparse_decode_attention_kernel)
 from repro.kernels.topl_select.topl_select import (
     decode_topl_thresholds_kernel, topl_thresholds_kernel)
 
@@ -105,14 +107,25 @@ def sparse_mha(q, k, v, codebooks, cfg: sa.SparseAttentionConfig,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "scale", "tile_k",
-                                             "interpret"))
+                                             "interpret", "fuse"))
 def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                       codes_cache: jax.Array, codebooks: jax.Array,
                       cfg: sa.SparseAttentionConfig, scale: float,
                       kv_valid: jax.Array, *, tile_k: int = 512,
-                      interpret: Optional[bool] = None) -> jax.Array:
-    """Drop-in replacement for core.sparse_attention.sparse_mha_decode:
-    decode-threshold kernel + fused decode attention kernel.
+                      interpret: Optional[bool] = None,
+                      fuse: bool = True) -> jax.Array:
+    """Drop-in replacement for core.sparse_attention.sparse_mha_decode.
+
+    fuse=True (default): ONE Pallas kernel — grid step 0 derives the
+    [t, need] thresholds from the whole code cache (pinned int8 codes
+    block; one-shot histogram, same integer math as the standalone
+    threshold kernel) straight into VMEM scratch, and the attention sweep
+    pairs key tiles two-per-step, so the launch count, the thresholds HBM
+    round-trip, AND half the grid steps disappear.  fuse=False: the
+    original two-pass pipeline (decode-threshold kernel + attention
+    kernel), kept as the bisection / fallback tier; both tiers produce
+    bit-identical output (they share the attention-tile body and visit
+    the same key tiles in the same newest-first order).
 
     q: (B, Hq, 1, d); caches: (B, Hk, S, d); codes_cache: (B, Hk, S, M);
     kv_valid: (B, S) bool.  Inference-only — no VJP (the jnp fallback stays
@@ -123,13 +136,16 @@ def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     The 1-token query codes are assigned on the jnp path (O(B*Hq*M*E), far
     below kernel-launch granularity and bit-identical to the fallback's);
     all O(S) work — code matching, threshold histogram, attention — runs in
-    the two Pallas kernels, with the R query heads of each kv group packed
-    on the sublane axis so no cache tensor is repeated across query heads.
+    Pallas, with the R query heads of each kv group packed on the sublane
+    axis so no cache tensor is repeated across query heads.
 
     A cache length that is not a multiple of tile_k is zero-padded up to
-    one (padded slots carry kv_valid=0, which the selection treats exactly
-    like any dead slot) so the kernels keep their Tk tiling — and their
-    O(Tk) VMEM bound — at arbitrary serving max_len.
+    one — and, on the fused tier, up to an EVEN tile count so the kernel
+    can pair tiles (padded slots carry kv_valid=0, which the selection
+    treats exactly like any dead slot; dead tiles leave every accumulator
+    untouched, so the tiers stay bit-identical across their different pad
+    lengths) — keeping the kernels' Tk tiling at arbitrary serving
+    max_len.
     """
     interpret = resolve_interpret(interpret)
     b, hq, _, d = q.shape
@@ -147,15 +163,94 @@ def sparse_mha_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     vg = v_cache.reshape(b * hk, s, d)
     kvv = kv_valid.astype(jnp.int32)                      # (B, S)
     tk = min(tile_k, s)
-    pad = -(-s // tk) * tk - s
+    ntile = -(-s // tk)
+    if fuse and ntile > 1 and ntile % 2:
+        ntile += 1          # fused kernel pairs key tiles: even tile count
+    pad = ntile * tk - s
     if pad:
         zkv = ((0, 0), (0, pad), (0, 0))
         kg, vg, ckg = (jnp.pad(t, zkv) for t in (kg, vg, ckg))
         kvv = jnp.pad(kvv, ((0, 0), (0, pad)))            # padded -> invalid
+    if fuse:
+        out = fused_sparse_decode_attention_kernel(
+            qg, kg, vg, cqg, ckg, kvv, scale=scale, l=l,
+            max_score=max_score, sum_rows=sum_rows, heads_per_batch=hk,
+            tile_k=tk, interpret=interpret)
+        return out.reshape(b, hq, 1, d)
     thr = decode_topl_thresholds_kernel(
         cqg, ckg, kvv, l=l, max_score=max_score, sum_rows=sum_rows,
         heads_per_batch=hk, tile_k=tk, interpret=interpret)
     out = sparse_decode_attention_kernel(
         qg, kg, vg, cqg, ckg, thr, kvv, scale=scale, sum_rows=sum_rows,
         heads_per_batch=hk, tile_k=tk, interpret=interpret)
+    return out.reshape(b, hq, 1, d)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scale", "tile_k",
+                                             "interpret"))
+def sparse_mha_decode_paged(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, codes_pool: jax.Array,
+                            codebooks: jax.Array,
+                            cfg: sa.SparseAttentionConfig, scale: float,
+                            kv_valid: jax.Array, page_table: jax.Array, *,
+                            tile_k: int = 512,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Paged-pool counterpart of ``sparse_mha_decode``: the fused one-pass
+    kernel reads K/V/code tiles straight out of the global page pools via
+    the scalar-prefetched page table — no gathered (B, Hk, S, .) view is
+    ever built, so per-step HBM traffic drops from pool-gather + kernel
+    read to the kernel read alone.
+
+    q: (B, Hq, 1, d); pools: (num_pages, Hk, page_size, .); page_table:
+    (B, MP) int32 with -1 = unallocated (clamped to page 0 here — the
+    repo-wide convention; those garbage rows carry kv_valid == 0);
+    kv_valid: (B, MP*page_size) bool in view coordinates.  The top-L
+    budget is computed over the view length, matching the gathered-view
+    path exactly; with equal tile_k the output is bit-identical to
+    ``sparse_mha_decode`` over ``kv_pages.gather_pages`` views.
+    The view length is a page multiple, so no padding is ever needed.
+    """
+    interpret = resolve_interpret(interpret)
+    b, hq, _, d = q.shape
+    _, hk, ps, _ = k_pool.shape
+    mp = page_table.shape[1]
+    view = mp * ps
+    r = hq // hk
+    m = codebooks.shape[0]
+    l = sa.top_l(view, cfg, None)
+    sum_rows = cfg.select_granularity == "kvgroup"
+    max_score = cfg.pq.num_books * (r if sum_rows else 1)
+    codes_q = pq.assign(q, codebooks)                     # (B, Hq, 1, M)
+    cqg = codes_q.reshape(b * hk, r, m)
+    qg = q.reshape(b * hk, r, d)
+    kvv = kv_valid.astype(jnp.int32)                      # (B, MP*ps)
+    pt = jnp.maximum(page_table, 0)
+    out = fused_sparse_decode_attention_paged_kernel(
+        pt, qg, k_pool, v_pool, cqg, codes_pool, kvv, scale=scale, l=l,
+        max_score=max_score, sum_rows=sum_rows, heads_per_batch=hk,
+        tile_k=tile_k, interpret=interpret)
+    return out.reshape(b, hq, 1, d)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "tile_k", "interpret"))
+def dense_mha_decode_paged(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, scale: float,
+                           kv_valid: jax.Array, page_table: jax.Array, *,
+                           tile_k: int = 512,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Dense decode attention straight off the paged KV pool (same
+    (page_id, offset) scalar-prefetch addressing as the sparse route) —
+    online softmax over the valid view slots, GQA query heads packed on
+    the sublane axis.  q: (B, Hq, 1, d); pools: (num_pages, Hk, ps, d);
+    kv_valid: (B, MP*ps); page_table: (B, MP) int32 (-1 clamped here)."""
+    interpret = resolve_interpret(interpret)
+    b, hq, _, d = q.shape
+    _, hk, _, _ = k_pool.shape
+    r = hq // hk
+    qg = q.reshape(b * hk, r, d)
+    kvv = kv_valid.astype(jnp.int32)
+    pt = jnp.maximum(page_table, 0)
+    out = dense_decode_attention_paged_kernel(
+        pt, qg, k_pool, v_pool, kvv, scale=scale, heads_per_batch=hk,
+        tile_k=tile_k, interpret=interpret)
     return out.reshape(b, hq, 1, d)

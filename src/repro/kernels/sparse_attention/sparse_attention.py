@@ -28,10 +28,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import resolve_interpret
 
-from repro.kernels.topl_select.topl_select import vmem
+from repro.kernels.topl_select.topl_select import (
+    hist_counts, hist_reduce, vmem)
 
 
 def _scores(cq, ck):
@@ -164,28 +166,25 @@ def sparse_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------- decode
-def _decode_attn_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, thr_ref,
-                        valid_ref, o_ref, m_ref, l_ref, acc_ref, tie_ref, *,
-                        scale, sum_rows, nkt):
-    kj = pl.program_id(1)                 # tiles visited newest slot first
+def _softmax_init(m_ref, l_ref, acc_ref, tie_ref):
+    m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    tie_ref[...] = jnp.zeros_like(tie_ref)
 
-    @pl.when(kj == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        tie_ref[...] = jnp.zeros_like(tie_ref)
 
-    cq = cq_ref[0]                        # (R, M)
-    ck = ck_ref[0]                        # (Tk, M)
-    s = _scores(cq, ck)                   # (R, Tk)
-    if sum_rows:                          # kvgroup: one shared selection
-        s = jnp.sum(s, axis=0, keepdims=True)         # (1, Tk)
-    valid = valid_ref[0] != 0             # (Tk,)
-    thr = thr_ref[0]                      # (R_out, 2)
+def _attend_tile(sm, thr, q_get, k_get, v_get,
+                 m_ref, l_ref, acc_ref, tie_ref, *, scale):
+    """One newest-first key tile of the thresholded online-softmax decode
+    attention — shared verbatim between the two-pass kernel and the fused
+    one-pass kernel's phase 2, so the two dispatch tiers stay bit-identical.
+
+    sm: (R_out, Tk) masked scores (-1 = dead slot); thr: (R_out, 2)
+    [t, need]; q/k/v_get: thunks returning the (R, dh)/(Tk, dh)/(Tk, dh)
+    tiles (deferred so a fully ineligible tile skips the VMEM reads and
+    MXU work via pl.when)."""
     t = thr[:, 0][:, None]
     need = thr[:, 1][:, None]
-    sm = jnp.where(valid[None, :], s, -1)
     above = sm > t
     at_t = sm == t
     # ties more recent (higher slot index) than position b: taken so far in
@@ -199,8 +198,8 @@ def _decode_attn_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, thr_ref,
 
     @pl.when(jnp.any(eligible))
     def _block():
-        q = q_ref[0].astype(jnp.float32)              # (R, dh)
-        k = k_ref[0].astype(jnp.float32)              # (Tk, dh)
+        q = q_get().astype(jnp.float32)               # (R, dh)
+        k = k_get().astype(jnp.float32)               # (Tk, dh)
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale       # (R, Tk)
@@ -212,19 +211,44 @@ def _decode_attn_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, thr_ref,
         alpha = jnp.where(finite, jnp.exp(m_prev - m_safe), 1.0)
         p = jnp.where(finite[:, None], jnp.exp(logits - m_safe[:, None]), 0.0)
         p = jnp.where(eligible, p, 0.0)
-        v = v_ref[0].astype(jnp.float32)
+        v = v_get().astype(jnp.float32)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
         m_ref[:, 0] = m_new
 
+
+def _write_out(o_ref, l_ref, acc_ref):
+    l = l_ref[:, 0]
+    out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+    out = jnp.where((l > 0)[:, None], out, 0.0)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, thr_ref,
+                        valid_ref, o_ref, m_ref, l_ref, acc_ref, tie_ref, *,
+                        scale, sum_rows, nkt):
+    kj = pl.program_id(1)                 # tiles visited newest slot first
+
+    @pl.when(kj == 0)
+    def _init():
+        _softmax_init(m_ref, l_ref, acc_ref, tie_ref)
+
+    cq = cq_ref[0]                        # (R, M)
+    ck = ck_ref[0]                        # (Tk, M)
+    s = _scores(cq, ck)                   # (R, Tk)
+    if sum_rows:                          # kvgroup: one shared selection
+        s = jnp.sum(s, axis=0, keepdims=True)         # (1, Tk)
+    valid = valid_ref[0] != 0             # (Tk,)
+    sm = jnp.where(valid[None, :], s, -1)
+    _attend_tile(sm, thr_ref[0],
+                 lambda: q_ref[0], lambda: k_ref[0], lambda: v_ref[0],
+                 m_ref, l_ref, acc_ref, tie_ref, scale=scale)
+
     @pl.when(kj == nkt - 1)
     def _finish():
-        l = l_ref[:, 0]
-        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
-        out = jnp.where((l > 0)[:, None], out, 0.0)
-        o_ref[0] = out.astype(o_ref.dtype)
+        _write_out(o_ref, l_ref, acc_ref)
 
 
 def sparse_decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -287,3 +311,367 @@ def sparse_decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(q, k, v, codes_q, codes_k, thresholds, kv_valid)
+
+
+# ----------------------------------------------- fused one-pass decode
+def _decode_scratch(r, r_out, dh):
+    """m / l / acc / tie / thr — the fused kernel owns the [t, need] pair
+    as VMEM scratch, so the thresholds tensor never round-trips through
+    HBM (the histogram itself lives in registers of the first grid step)."""
+    return [
+        vmem((r, 1), jnp.float32),
+        vmem((r, 1), jnp.float32),
+        vmem((r, dh), jnp.float32),
+        vmem((r_out, 1), jnp.int32),
+        vmem((r_out, 2), jnp.int32),
+    ]
+
+
+def _pair_of(nkt: int) -> int:
+    """Key tiles folded into one grid step: 2 when the tile count is even
+    (one double-width block read, two attention sub-tiles in newest-first
+    order — halves the grid without touching the accumulation order), else
+    1 (ragged tile counts fall back to the single-tile schedule)."""
+    return 2 if nkt > 1 and nkt % 2 == 0 else 1
+
+
+def _mask_scores(cq, ck, valid, sum_rows):
+    """Codes + validity -> (R_out, N) masked match scores (-1 = dead)."""
+    s = _scores(cq, ck)
+    if sum_rows:
+        s = jnp.sum(s, axis=0, keepdims=True)
+    return jnp.where(valid[None, :], s, -1)
+
+
+def _fused_step(kj, q_ref, thresholds, tiles, o_ref, m_ref, l_ref, acc_ref,
+                tie_ref, thr_ref, *, scale, sum_rows, nsteps):
+    """Shared step body of the fused one-pass decode kernels (contiguous
+    and paged).  Step 0 computes the FULL-cache threshold in one shot
+    (thresholds(): identical integer math to the standalone threshold
+    kernel, so the two-pass tier stays bit-identical) and every step then
+    replays its `tiles` — [(masked-score thunk, k thunk, v thunk), ...]
+    newest slot first — through the exact two-pass attention body."""
+    @pl.when(kj == 0)
+    def _init():
+        _softmax_init(m_ref, l_ref, acc_ref, tie_ref)
+        thr_ref[...] = thresholds()
+
+    for sm_get, k_get, v_get in tiles:
+        _attend_tile(sm_get(), thr_ref[...], lambda: q_ref[0], k_get, v_get,
+                     m_ref, l_ref, acc_ref, tie_ref, scale=scale)
+
+    @pl.when(kj == nsteps - 1)
+    def _finish():
+        _write_out(o_ref, l_ref, acc_ref)
+
+
+def _fused_decode_kernel(q_ref, k_ref, v_ref, cq_ref, ck_ref, valid_ref,
+                         o_ref, m_ref, l_ref, acc_ref, tie_ref, thr_ref, *,
+                         scale, l, max_score, sum_rows, tk, pair, nsteps):
+    kj = pl.program_id(1)
+    cq = cq_ref[0]
+    ck_all = ck_ref[0]                    # (nk, M) — whole (padded) cache
+    valid_all = valid_ref[0] != 0         # (nk,)
+
+    def thresholds():
+        sm_all = _mask_scores(cq, ck_all, valid_all, sum_rows)
+        return hist_reduce(hist_counts(sm_all, max_score), l)
+
+    base = (nsteps - 1 - kj) * pair       # oldest tile of this step's block
+
+    def tile(h):
+        start = (base + h) * tk
+
+        def sm_get():
+            ck = jax.lax.dynamic_slice_in_dim(ck_all, start, tk, axis=0)
+            valid = jax.lax.dynamic_slice_in_dim(valid_all, start, tk)
+            return _mask_scores(cq, ck, valid, sum_rows)
+
+        return (sm_get,
+                lambda: k_ref[0, h * tk:(h + 1) * tk],
+                lambda: v_ref[0, h * tk:(h + 1) * tk])
+
+    _fused_step(kj, q_ref, thresholds, [tile(h) for h in
+                                        reversed(range(pair))],
+                o_ref, m_ref, l_ref, acc_ref, tie_ref, thr_ref,
+                scale=scale, sum_rows=sum_rows, nsteps=nsteps)
+
+
+def fused_sparse_decode_attention_kernel(
+        q: jax.Array, k: jax.Array, v: jax.Array, codes_q: jax.Array,
+        codes_k: jax.Array, kv_valid: jax.Array, *, scale: float, l: int,
+        max_score: int, sum_rows: bool, heads_per_batch: int,
+        tile_k: int = 512, interpret: Optional[bool] = None) -> jax.Array:
+    """One-pass decode: thresholds fused into the attention kernel, and
+    the key axis swept at HALF the two-pass grid length.
+
+    The whole (padded) code cache and validity row ride as pinned blocks —
+    M int8 lanes per slot vs 2*dh f32/bf16 lanes of K+V, so they are the
+    cheap operands — and grid step 0 computes the full score histogram and
+    the (R_out, 2) [t, need] thresholds in ONE shot into VMEM scratch: no
+    prologue steps, no thresholds HBM round-trip, no second kernel launch.
+    Each step then reads one (pair*Tk) K/V block and replays its `pair`
+    sub-tiles newest-slot-first through the two-pass kernels' attention
+    body, so the eligibility rule, tie budget, and online-softmax
+    accumulation ORDER are identical and the output stays bit-identical to
+    the two-pass tier (the sweep visits the same Tk tiles in the same
+    order — only the number visited per grid step changes).
+
+    Grid (G, nkt / pair), pair = 2 when nkt is even.  vs the two-pass
+    pipeline: one launch instead of two, thresholds never exist in HBM,
+    and half the grid steps (double-width K/V DMA per step).
+
+    Shapes as sparse_decode_attention_kernel; nk must be a multiple of
+    pair*tile_k (the ops wrapper zero-pads, dead slots carry kv_valid=0);
+    the pinned codes block keeps VMEM at O(nk*M) int8 — ~64 KB at S=8192.
+    """
+    interpret = resolve_interpret(interpret)
+    g, r, dh = q.shape
+    _, nk, _ = k.shape
+    m = codes_q.shape[-1]
+    r_out = 1 if sum_rows else r
+    tk = min(tile_k, nk)
+    if nk % tk:
+        tk = nk
+    nkt = nk // tk
+    pair = _pair_of(nkt)
+    nsteps = nkt // pair
+    hpb = heads_per_batch
+    kernel = functools.partial(_fused_decode_kernel, scale=scale, l=l,
+                               max_score=max_score, sum_rows=sum_rows,
+                               tk=tk, pair=pair, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=(g, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, r, dh), lambda gi, kj: (gi, 0, 0)),
+            pl.BlockSpec((1, pair * tk, dh),
+                         lambda gi, kj: (gi, nsteps - 1 - kj, 0)),
+            pl.BlockSpec((1, pair * tk, dh),
+                         lambda gi, kj: (gi, nsteps - 1 - kj, 0)),
+            pl.BlockSpec((1, r, m), lambda gi, kj: (gi, 0, 0)),
+            pl.BlockSpec((1, nk, m), lambda gi, kj: (gi, 0, 0)),
+            pl.BlockSpec((1, nk), lambda gi, kj: (gi // hpb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, dh), lambda gi, kj: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, r, dh), q.dtype),
+        scratch_shapes=_decode_scratch(r, r_out, dh),
+        interpret=interpret,
+    )(q, k, v, codes_q, codes_k, kv_valid)
+
+
+# ----------------------------------------------- kernel-native paging
+def _fused_decode_paged_kernel(pt_ref, q_ref, k_ref, v_ref, cq_ref,
+                               ckslab_ref, valid_ref, o_ref, m_ref, l_ref,
+                               acc_ref, tie_ref, thr_ref, *, scale, l,
+                               max_score, sum_rows, tk, pair, nsteps, hpb,
+                               mp, ps):
+    kj = pl.program_id(1)
+    gi_b = pl.program_id(0) // hpb
+    cq = cq_ref[0]
+    # Codes + validity ride ONCE as whole-pool-slab / whole-row pinned
+    # blocks (M int8 lanes vs 2*dh f32 lanes of K+V — the cheap operands);
+    # logical tiles are sliced in-register via the scalar-prefetched page
+    # table, never gathered from HBM.
+    slab = ckslab_ref[:, 0].astype(jnp.int32)             # (P, ps, M)
+    pages = jax.lax.dynamic_slice_in_dim(
+        pt_ref[...], gi_b, 1, axis=0)[0]                  # (MP,)
+    valid_all = valid_ref[0] != 0                         # (MP*ps,)
+
+    def thresholds():
+        ck_all = jnp.take(slab, pages, axis=0).reshape(mp * ps, -1)
+        return hist_reduce(hist_counts(
+            _mask_scores(cq, ck_all, valid_all, sum_rows), max_score), l)
+
+    base = (nsteps - 1 - kj) * pair       # oldest view tile in this block
+
+    def tile(h):
+        vt = base + h                     # logical view tile index
+
+        def sm_get():
+            page = jax.lax.dynamic_index_in_dim(pages, vt // (ps // tk),
+                                                keepdims=False)
+            ck = jax.lax.dynamic_slice(
+                slab, (page, (vt % (ps // tk)) * tk, 0),
+                (1, tk, slab.shape[-1]))[0]
+            valid = jax.lax.dynamic_slice_in_dim(valid_all, vt * tk, tk)
+            return _mask_scores(cq, ck, valid, sum_rows)
+
+        return (sm_get,
+                lambda: k_ref[0, 0, h * tk:(h + 1) * tk],
+                lambda: v_ref[0, 0, h * tk:(h + 1) * tk])
+
+    _fused_step(kj, q_ref, thresholds, [tile(h) for h in
+                                        reversed(range(pair))],
+                o_ref, m_ref, l_ref, acc_ref, tie_ref, thr_ref,
+                scale=scale, sum_rows=sum_rows, nsteps=nsteps)
+
+
+def fused_sparse_decode_attention_paged_kernel(
+        page_table: jax.Array, q: jax.Array, k_pool: jax.Array,
+        v_pool: jax.Array, codes_q: jax.Array, codes_pool: jax.Array,
+        kv_valid: jax.Array, *, scale: float, l: int, max_score: int,
+        sum_rows: bool, heads_per_batch: int, tile_k: int = 512,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Fused one-pass decode reading the paged KV pool DIRECTLY: the
+    per-slot page table rides as a scalar-prefetch operand and the K/V/code
+    BlockSpec index_maps translate each logical view block to
+    (page_table[slot, block // blocks_per_page], head, offset) — no
+    gathered (B, Hk, S, .) view of the pool ever materializes.
+
+    Thresholds are computed in grid step 0 from the codes POOL SLAB (every
+    page of this head's code pool pinned in VMEM — int8, M lanes, so the
+    slab is ~2*dh*itemsize/M times smaller than K+V) by gathering the MP
+    logical pages in-register via the prefetched table; identical integer
+    math to the standalone threshold kernel.  Each step then reads one
+    (pair*Tk) K/V block of a single page and replays its sub-tiles
+    newest-slot-first through the shared attention body — pair = 2 when
+    tiles_per_page is even, so blocks never straddle a page.  Per-tile
+    code/validity tiles are sliced in-register from the same pinned slab /
+    full row (the cheap operands ride once; only K/V stream per-step).
+
+    page_table: (B, MP) int32, clamped non-negative by the caller (the
+    repo-wide convention: unallocated -> page 0, whose garbage rows carry
+    kv_valid == 0).  q/codes_q: (G, R, .) with G = B*Hk; pools:
+    (P, Hk, page_size, .); kv_valid: (B, MP*page_size) in view coordinates.
+    The tile size divides page_size so no tile straddles a page boundary;
+    the sweep visits the same Tk tiles in the same newest-first order as
+    the contiguous kernel, so given equal tile_k the output is
+    bit-identical to running the contiguous fused kernel (or the two-pass
+    pair) over the gathered view.
+    """
+    interpret = resolve_interpret(interpret)
+    g, r, dh = q.shape
+    _, hk, ps, _ = k_pool.shape
+    mp = page_table.shape[1]
+    m = codes_q.shape[-1]
+    r_out = 1 if sum_rows else r
+    tk = min(tile_k, ps)
+    if ps % tk:
+        tk = ps
+    ppt = ps // tk                        # tiles per page
+    pair = _pair_of(ppt)                  # pairs never straddle a page
+    nsteps = (mp * ps) // (pair * tk)
+    bpp = ppt // pair                     # (pair*tk)-blocks per page
+    hpb = heads_per_batch
+    num_pages = k_pool.shape[0]
+    kernel = functools.partial(_fused_decode_paged_kernel, scale=scale, l=l,
+                               max_score=max_score, sum_rows=sum_rows,
+                               tk=tk, pair=pair, nsteps=nsteps, hpb=hpb,
+                               mp=mp, ps=ps)
+
+    def pool_idx(gi, kj, pt):             # newest-first view block -> pool
+        bt = nsteps - 1 - kj
+        return (pt[gi // hpb, bt // bpp], gi % hpb, bt % bpp, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, r, dh), lambda gi, kj, pt: (gi, 0, 0)),
+            pl.BlockSpec((1, 1, pair * tk, dh), pool_idx),
+            pl.BlockSpec((1, 1, pair * tk, dh), pool_idx),
+            pl.BlockSpec((1, r, m), lambda gi, kj, pt: (gi, 0, 0)),
+            pl.BlockSpec((num_pages, 1, ps, m),
+                         lambda gi, kj, pt: (0, gi % hpb, 0, 0)),
+            pl.BlockSpec((1, mp * ps), lambda gi, kj, pt: (gi // hpb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, dh), lambda gi, kj, pt: (gi, 0, 0)),
+        scratch_shapes=_decode_scratch(r, r_out, dh),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, r, dh), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pool, v_pool, codes_q, codes_pool,
+      kv_valid)
+
+
+def _dense_decode_paged_kernel(pt_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
+                               m_ref, l_ref, acc_ref, *, scale, nkt):
+    del pt_ref
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = valid_ref[0] != 0             # (Tk,)
+
+    @pl.when(jnp.any(valid))
+    def _block():
+        q = q_ref[0].astype(jnp.float32)              # (R, dh)
+        k = k_ref[0, 0].astype(jnp.float32)           # (Tk, dh)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(valid[None, :], logits, -jnp.inf)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        finite = m_new > -jnp.inf
+        m_safe = jnp.where(finite, m_new, 0.0)
+        alpha = jnp.where(finite, jnp.exp(m_prev - m_safe), 1.0)
+        p = jnp.where(finite[:, None], jnp.exp(logits - m_safe[:, None]), 0.0)
+        p = jnp.where(valid[None, :], p, 0.0)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_new
+
+    @pl.when(kj == nkt - 1)
+    def _finish():
+        _write_out(o_ref, l_ref, acc_ref)
+
+
+def dense_decode_attention_paged_kernel(
+        page_table: jax.Array, q: jax.Array, k_pool: jax.Array,
+        v_pool: jax.Array, kv_valid: jax.Array, *, scale: float,
+        heads_per_batch: int, tile_k: int = 512,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Dense single-token decode attention over the paged KV pool with the
+    same scalar-prefetched (page_id, offset) tile addressing as the sparse
+    paged kernel — the dense serving route also stops paying the per-step
+    gather.  Online softmax over valid slots; dead/garbage rows masked to
+    -inf.  Tiles stream forward (no tie budget, so order is free).
+    """
+    interpret = resolve_interpret(interpret)
+    g, r, dh = q.shape
+    _, hk, ps, _ = k_pool.shape
+    mp = page_table.shape[1]
+    tk = min(tile_k, ps)
+    if ps % tk:
+        tk = ps
+    ppt = ps // tk
+    nkt = (mp * ps) // tk
+    hpb = heads_per_batch
+    kernel = functools.partial(_dense_decode_paged_kernel, scale=scale,
+                               nkt=nkt)
+
+    def pool_idx(gi, kj, pt):
+        return (pt[gi // hpb, kj // ppt], gi % hpb, kj % ppt, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, nkt),
+        in_specs=[
+            pl.BlockSpec((1, r, dh), lambda gi, kj, pt: (gi, 0, 0)),
+            pl.BlockSpec((1, 1, tk, dh), pool_idx),
+            pl.BlockSpec((1, 1, tk, dh), pool_idx),
+            pl.BlockSpec((1, tk), lambda gi, kj, pt: (gi // hpb, kj)),
+        ],
+        out_specs=pl.BlockSpec((1, r, dh), lambda gi, kj, pt: (gi, 0, 0)),
+        scratch_shapes=[
+            vmem((r, 1), jnp.float32),
+            vmem((r, 1), jnp.float32),
+            vmem((r, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, r, dh), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pool, v_pool, kv_valid)

@@ -59,21 +59,11 @@ def _hist_kernel(cq_ref, ck_ref, thr_ref, hist_ref, *, max_score, l,
     k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tk,), 0)
     valid = _mask(q_pos, k_pos, causal, window)
     sm = jnp.where(valid, s, -1)
-    for v in range(max_score + 1):
-        hist_ref[:, v] += jnp.sum((sm == v).astype(jnp.int32), axis=1)
+    hist_accumulate(hist_ref, sm, max_score)
 
     @pl.when(ki == nkt - 1)
     def _finish():
-        hist = hist_ref[...]                          # (Tq, M+1)
-        # ge[v] = #keys with score >= v  (suffix sums, small static loop)
-        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
-        meets = (ge >= l).astype(jnp.int32)
-        t = jnp.maximum(jnp.sum(meets, axis=1) - 1, 0)
-        ge_pad = jnp.concatenate(
-            [ge, jnp.zeros((hist.shape[0], 1), jnp.int32)], axis=1)
-        n_above = jnp.take_along_axis(ge_pad, (t + 1)[:, None], axis=1)[:, 0]
-        need = l - n_above
-        thr_ref[0] = jnp.stack([t, need], axis=1).astype(jnp.int32)
+        thr_ref[0] = hist_reduce(hist_ref[...], l)
 
 
 def topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array, *,
@@ -117,6 +107,35 @@ def vmem(shape, dtype):
 
 
 # ---------------------------------------------------------------- decode
+def hist_counts(sm, max_score):
+    """(R_out, N) masked scores (-1 = dead slot) -> (R_out, max_score+1)
+    bucket counts.  N is arbitrary: the two-pass threshold kernel folds one
+    Tk tile at a time into scratch, the fused one-pass decode kernel counts
+    the whole cache row in its first grid step.  Integer counts are
+    order-independent, so both routes derive bit-identical thresholds."""
+    return jnp.stack([jnp.sum((sm == v).astype(jnp.int32), axis=1)
+                      for v in range(max_score + 1)], axis=1)
+
+
+def hist_accumulate(hist_ref, sm, max_score):
+    """Fold one (R_out, Tk) masked-score tile into the bucket histogram
+    scratch (the streaming form used by the two-pass threshold kernel)."""
+    hist_ref[...] += hist_counts(sm, max_score)
+
+
+def hist_reduce(hist, l):
+    """Histogram (R_out, max_score+1) -> (R_out, 2) int32 [threshold bucket
+    t, tie budget need]: the bucket where high-to-low reading stops at L
+    keys, and how many score==t keys (most recent first) still fit."""
+    ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
+    meets = (ge >= l).astype(jnp.int32)
+    t = jnp.maximum(jnp.sum(meets, axis=1) - 1, 0)
+    ge_pad = jnp.concatenate(
+        [ge, jnp.zeros((hist.shape[0], 1), jnp.int32)], axis=1)
+    n_above = jnp.take_along_axis(ge_pad, (t + 1)[:, None], axis=1)[:, 0]
+    return jnp.stack([t, l - n_above], axis=1).astype(jnp.int32)
+
+
 def _decode_hist_kernel(cq_ref, ck_ref, valid_ref, thr_ref, hist_ref, *,
                         max_score, l, sum_rows, nkt):
     ki = pl.program_id(1)
@@ -132,19 +151,11 @@ def _decode_hist_kernel(cq_ref, ck_ref, valid_ref, thr_ref, hist_ref, *,
         s = jnp.sum(s, axis=0, keepdims=True)     # one selection per kv head
     valid = valid_ref[0] != 0                     # (Tk,)
     sm = jnp.where(valid[None, :], s, -1)         # (R_out, Tk)
-    for v in range(max_score + 1):
-        hist_ref[:, v] += jnp.sum((sm == v).astype(jnp.int32), axis=1)
+    hist_accumulate(hist_ref, sm, max_score)
 
     @pl.when(ki == nkt - 1)
     def _finish():
-        hist = hist_ref[...]                      # (R_out, max_score+1)
-        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]
-        meets = (ge >= l).astype(jnp.int32)
-        t = jnp.maximum(jnp.sum(meets, axis=1) - 1, 0)
-        ge_pad = jnp.concatenate(
-            [ge, jnp.zeros((hist.shape[0], 1), jnp.int32)], axis=1)
-        n_above = jnp.take_along_axis(ge_pad, (t + 1)[:, None], axis=1)[:, 0]
-        thr_ref[0] = jnp.stack([t, l - n_above], axis=1).astype(jnp.int32)
+        thr_ref[0] = hist_reduce(hist_ref[...], l)
 
 
 def decode_topl_thresholds_kernel(codes_q: jax.Array, codes_k: jax.Array,

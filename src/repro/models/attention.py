@@ -300,42 +300,37 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
             new_cache = write_cache(cache, cfg, p, k, v, pos_k)
     elif mode == "decode" and page_table is not None and window is None:
         # paged pool: scatter the new token into its slot's page, then
-        # attend over the gathered per-slot view (kernel-native page
-        # indexing is a ROADMAP follow-on; the gathered view is exactly
-        # what the contiguous path reads, so selection and masking are
-        # unchanged).
-        from repro.serving import kv_pages
+        # attend.  Kernel tier: the decode kernels address (page_id,
+        # offset) tiles straight out of the pools via the scalar-
+        # prefetched page table — no gathered per-slot view exists.
+        # Fallback tier (jnp oracle, kill switch, or a caller without a
+        # view-coordinate validity mask): models/paged_fallback.py
+        # gathers the view and runs the contiguous decode paths over it.
+        from repro.models import paged_fallback
         assert cache is not None and pos is not None
         pos_b = jnp.broadcast_to(start, (b,)).astype(jnp.int32)
         new_cache = write_cache_paged(cache, cfg, p, k, v, pos_b, page_table)
         ps = new_cache["k"].shape[2]
-        k_view = kv_pages.gather_pages(new_cache["k"], page_table)
-        v_view = kv_pages.gather_pages(new_cache["v"], page_table)
-        s_view = k_view.shape[2]
-        if kv_valid is not None and kv_valid.shape[-1] == s_view:
-            valid = kv_valid                              # engine-tracked
-        else:
-            # self-derived: slot_pos visibility AND page-table occupancy
-            # (clamped gathers of unallocated pages read garbage rows)
-            sp = kv_pages.gather_pages(new_cache["slot_pos"], page_table)
-            valid = ((sp >= 0) & (sp <= pos_b[:, None])
-                     & kv_pages.occupancy(page_table, ps))
+        s_view = page_table.shape[1] * ps
         scale = hd ** -0.5
-        if sparse_applicable(cfg):
-            codes_view = kv_pages.gather_pages(new_cache["codes"],
-                                               page_table)
-            if kdispatch.use_sparse_decode_kernel(cfg):
-                from repro.kernels.sparse_attention import ops as sa_ops
-                out = sa_ops.sparse_mha_decode(
-                    q, k_view, v_view, codes_view, p["pq"]["codebooks"],
-                    _sa_config(cfg), scale, valid)
+        sparse = sparse_applicable(cfg)
+        engine_valid = kv_valid is not None and kv_valid.shape[-1] == s_view
+        native = (engine_valid and kdispatch.use_paged_native_decode(cfg)
+                  and (not sparse or kdispatch.use_sparse_decode_kernel(cfg)))
+        if native:
+            from repro.kernels.sparse_attention import ops as sa_ops
+            if sparse:
+                out = sa_ops.sparse_mha_decode_paged(
+                    q, new_cache["k"], new_cache["v"], new_cache["codes"],
+                    p["pq"]["codebooks"], _sa_config(cfg), scale, kv_valid,
+                    page_table)
             else:
-                out = sa.sparse_mha_decode(
-                    q, k_view, v_view, codes_view, p["pq"]["codebooks"],
-                    _sa_config(cfg), scale, valid)
+                out = sa_ops.dense_mha_decode_paged(
+                    q, new_cache["k"], new_cache["v"], scale, kv_valid,
+                    page_table)
         else:
-            out = sa.dense_attention(q, k_view, v_view, scale, causal=False,
-                                     kv_valid=valid, chunk_q=1)
+            out = paged_fallback.decode_attend_gathered(
+                p, cfg, q, new_cache, page_table, pos_b, kv_valid, scale)
     elif mode == "decode":
         assert cache is not None and pos is not None
         new_cache = write_cache(cache, cfg, p, k, v, pos_q)
@@ -351,7 +346,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                 from repro.kernels.sparse_attention import ops as sa_ops
                 out = sa_ops.sparse_mha_decode(
                     q, new_cache["k"], new_cache["v"], new_cache["codes"],
-                    p["pq"]["codebooks"], _sa_config(cfg), scale, valid)
+                    p["pq"]["codebooks"], _sa_config(cfg), scale, valid,
+                    fuse=kdispatch.use_fused_decode_attn(cfg))
             else:
                 out = sa.sparse_mha_decode(
                     q, new_cache["k"], new_cache["v"], new_cache["codes"],

@@ -1,0 +1,73 @@
+"""Gathered-view fallback tier for paged-pool decode attention.
+
+The default paged decode route (models/attention.py) is kernel-native: the
+Pallas decode kernels address K/V/code tiles straight out of the global
+page pools through a scalar-prefetched page table, so no per-slot gathered
+view ever materializes.  This module is the OTHER tier — it builds the
+gathered (B, Hk, MP*page_size, .) views with ``kv_pages.gather_pages`` and
+runs the contiguous decode paths over them.  It exists for three callers:
+
+- the jnp oracle (``attn_impl != "pallas"`` / ``kv_paged_native="gather"``),
+- the ``REPRO_DISABLE_KERNELS=1`` kill switch and kernel-vs-jnp bisection,
+- direct ``lm_decode_step`` callers that did not hand in the engine's
+  view-coordinate validity mask (the kernels require it; the fallback can
+  reconstruct validity from the gathered ``slot_pos``).
+
+It is deliberately the ONE models/serving module allowed to call
+``gather_pages`` at decode time — ``analysis/lint.py`` bans the call
+everywhere else so the O(S) gather cannot quietly creep back onto the
+default hot path.  Only the views a path actually reads are gathered:
+K/V always, cached PQ codes only on the sparse route, ``slot_pos`` only
+when the engine validity mask is absent.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch as kdispatch
+from repro.core import sparse_attention as sa
+from repro.serving import kv_pages
+
+
+def decode_attend_gathered(p: dict, cfg, q: jax.Array, cache: dict,
+                           page_table: jax.Array, pos_b: jax.Array,
+                           kv_valid: Optional[jax.Array],
+                           scale: float) -> jax.Array:
+    """Single-token decode attention over a paged cache via gathered views.
+
+    q: (B, Hq, 1, d); cache: paged pool dict (k/v/codes: (P, Hk, ps, .),
+    slot_pos: (P, ps)); page_table: (B, MP) int32; pos_b: (B,) absolute
+    positions; kv_valid: optional engine-tracked (B, MP*ps) mask.
+    Selection and masking are exactly the contiguous path's — the gathered
+    view is what the pre-kernel-native route always read, so this tier is
+    the bit-reference for the paged kernels (at equal tile size).
+    """
+    from repro.models import attention as mattn
+    ps = cache["k"].shape[2]
+    k_view = kv_pages.gather_pages(cache["k"], page_table)
+    v_view = kv_pages.gather_pages(cache["v"], page_table)
+    s_view = k_view.shape[2]
+    if kv_valid is not None and kv_valid.shape[-1] == s_view:
+        valid = kv_valid                              # engine-tracked
+    else:
+        # self-derived: slot_pos visibility AND page-table occupancy
+        # (clamped gathers of unallocated pages read garbage rows)
+        sp = kv_pages.gather_pages(cache["slot_pos"], page_table)
+        valid = ((sp >= 0) & (sp <= pos_b[:, None])
+                 & kv_pages.occupancy(page_table, ps))
+    if mattn.sparse_applicable(cfg):
+        codes_view = kv_pages.gather_pages(cache["codes"], page_table)
+        if kdispatch.use_sparse_decode_kernel(cfg):
+            from repro.kernels.sparse_attention import ops as sa_ops
+            return sa_ops.sparse_mha_decode(
+                q, k_view, v_view, codes_view, p["pq"]["codebooks"],
+                mattn._sa_config(cfg), scale, valid,
+                fuse=kdispatch.use_fused_decode_attn(cfg))
+        return sa.sparse_mha_decode(
+            q, k_view, v_view, codes_view, p["pq"]["codebooks"],
+            mattn._sa_config(cfg), scale, valid)
+    return sa.dense_attention(q, k_view, v_view, scale, causal=False,
+                              kv_valid=valid, chunk_q=1)

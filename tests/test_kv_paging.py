@@ -214,17 +214,20 @@ def test_lazy_page_growth_across_boundary():
 
 # ----------------------------------------------------- sparse decode kernel
 def test_paged_sparse_decode_kernel_on_off(monkeypatch):
-    """Paged greedy decode through the fused Pallas sparse-MHA decode
-    kernel (interpret off-TPU) == the jnp fallback == the kill switch,
-    and all three == the contiguous layout.  All-f32 keeps accumulation
-    order inside float noise (same rationale as test_sparse_decode)."""
+    """Paged greedy decode through the kernel-native route (page table
+    scalar-prefetched into the fused Pallas decode kernel, interpret
+    off-TPU) == the explicit gathered-view kernel tier == the jnp fallback
+    == the kill switch, and all of them == the contiguous layout.  All-f32
+    keeps accumulation order inside float noise (same rationale as
+    test_sparse_decode)."""
     base = dataclasses.replace(_tiny_cfg(), dtype=jnp.float32).with_spt(
         routed_ffn=False)
     reqs = _reqs(base, [9, 14], gen=3, seed=5)
 
-    def run(layout, impl, disable=False):
+    def run(layout, impl, disable=False, native="auto"):
         monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1" if disable else "0")
-        cfg = base.with_spt(kv_layout=layout, decode_attn_impl=impl)
+        cfg = base.with_spt(kv_layout=layout, decode_attn_impl=impl,
+                            kv_paged_native=native)
         try:
             eng = Engine(cfg, _params(base), max_len=32, num_slots=2,
                          decode_chunk=CHUNK)
@@ -234,7 +237,8 @@ def test_paged_sparse_decode_kernel_on_off(monkeypatch):
 
     want = run("contiguous", "jnp")
     assert run("paged", "jnp") == want
-    assert run("paged", "kernel") == want
+    assert run("paged", "kernel") == want                # kernel-native
+    assert run("paged", "kernel", native="gather") == want  # gathered tier
     assert run("paged", "kernel", disable=True) == want  # kill switch
 
 

@@ -1,9 +1,16 @@
-"""Parity suite for the fused Pallas sparse-MHA decode path (interpret=True
-on CPU — the same kernels lower to TPU): decode-threshold kernel and fused
-decode-attention kernel vs the jnp fallback oracle `sa.sparse_mha_decode`,
-across selection granularities, GQA ratios, ring-buffer validity masks, and
-degenerate cases; plus an engine-level check that greedy serving outputs are
-identical with the kernel path on vs off.
+"""Parity suite for the Pallas sparse-MHA decode path (interpret=True on
+CPU — the same kernels lower to TPU): decode-threshold kernel vs its ref,
+and the one-pass fused decode kernel vs the two-pass kernel pair vs the jnp
+fallback oracle `sa.sparse_mha_decode`, across selection granularities, GQA
+ratios, ring-buffer validity masks, and degenerate cases.  Every parity
+case runs BOTH fuse modes against ONE oracle evaluation (`_assert_parity`):
+fused and two-pass share their tile bodies so they must agree bit-exactly,
+which means the expensive oracle is computed once per combo rather than per
+mode.  Also covers: paged-native (page_id, offset) kernels vs the
+gathered-view tier (bit-identical at equal tile size), dispatch gating for
+the `decode_attn_fuse` / `kv_paged_native` switches, and an engine-level
+check that greedy serving outputs are identical with the kernel path on vs
+off.
 
 These fast cases run in scripts/ci_fast.sh so the kernel path is exercised
 on every iteration; the wide (S, L, dtype) sweep is marked `slow`.
@@ -19,10 +26,13 @@ from repro import configs
 from repro.core import dispatch, pq
 from repro.core import sparse_attention as sa
 from repro.core.params import init_tree
+from repro.kernels.sparse_attention.ops import (dense_mha_decode_paged,
+                                                sparse_mha_decode_paged)
 from repro.kernels.sparse_attention.ops import sparse_mha_decode as k_decode
 from repro.kernels.topl_select.ops import decode_topl_thresholds
 from repro.kernels.topl_select.ref import decode_thresholds_ref
 from repro.models import transformer
+from repro.serving import kv_pages as kvp
 from repro.serving.engine import Engine, Request
 from repro.train.state import model_defs
 
@@ -42,12 +52,19 @@ def _decode_case(b, hq, hk, s, d, seed=0, dtype=jnp.float32):
 
 
 def _assert_parity(q, k, v, codes, cb, scfg, kv_valid, tol=2e-3, tile_k=512):
+    """One oracle evaluation checks both kernel tiers: the one-pass fused
+    kernel and the two-pass pair share `hist_reduce`/`_attend_tile`, so
+    they must agree bit-exactly — only one of them needs the (expensive)
+    jnp-oracle comparison."""
     d = q.shape[-1]
-    out_k = k_decode(q, k, v, codes, cb, scfg, d ** -0.5, kv_valid,
-                     tile_k=tile_k, interpret=True)
+    out_f = k_decode(q, k, v, codes, cb, scfg, d ** -0.5, kv_valid,
+                     tile_k=tile_k, interpret=True, fuse=True)
+    out_t = k_decode(q, k, v, codes, cb, scfg, d ** -0.5, kv_valid,
+                     tile_k=tile_k, interpret=True, fuse=False)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_t))
     out_r = sa.sparse_mha_decode(q, k, v, codes, cb, scfg, d ** -0.5,
                                  kv_valid)
-    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+    np.testing.assert_allclose(np.asarray(out_f, np.float32),
                                np.asarray(out_r, np.float32),
                                rtol=tol, atol=tol)
 
@@ -116,9 +133,10 @@ def test_decode_kernel_degenerate(gran):
     _assert_parity(q, k, v, codes, cb, scfg, jnp.ones((b, s), bool))
     single = jnp.zeros((b, s), bool).at[:, 3].set(True)
     _assert_parity(q, k, v, codes, cb, scfg, single)
-    out = k_decode(q, k, v, codes, cb, scfg, d ** -0.5,
-                   jnp.zeros((b, s), bool), interpret=True)
-    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    for fuse in (True, False):
+        out = k_decode(q, k, v, codes, cb, scfg, d ** -0.5,
+                       jnp.zeros((b, s), bool), interpret=True, fuse=fuse)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
 
 
 @pytest.mark.parametrize("gran", ["qhead", "kvgroup"])
@@ -171,6 +189,65 @@ def test_masked_decode_form_matches_fallback():
                                    rtol=2e-3, atol=2e-3, err_msg=gran)
 
 
+# ---------------------------------------------- paged-native vs gathered
+def _paged_case(ps, mp, seed=23):
+    """A small paged pool with holes: 2 slots over an 8-page pool, slot 1
+    page-table rows out of order (pages are allocated in admission order,
+    not address order) and slot positions mid-page."""
+    b, hq, hk, d, pool = 2, 4, 2, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d))
+    k_pool = jax.random.normal(ks[1], (pool, hk, ps, d))
+    v_pool = jax.random.normal(ks[2], (pool, hk, ps, d))
+    pt = jnp.asarray(np.asarray(
+        [[2, 5, -1], [7, 0, 3]], np.int32)[:, :mp])
+    pos = jnp.asarray([min(2 * ps - 3, mp * ps - 1), ps // 2 + 1])
+    view = pt.shape[1] * ps
+    kv_valid = ((jnp.arange(view)[None, :] < pos[:, None])
+                & kvp.occupancy(pt, ps))
+    return q, k_pool, v_pool, pt, kv_valid
+
+
+@pytest.mark.parametrize("ps,tile_k", [(8, 8), (16, 16), (16, 8)])
+def test_paged_native_sparse_matches_gathered_view(ps, tile_k):
+    """Kernel-native (page_id, offset) addressing must be BIT-identical to
+    the gathered-view fused kernel at equal tile size: same tile walk in
+    the same order over the same data, just addressed through the
+    scalar-prefetched page table instead of a materialized gather.
+    Includes sub-page tiles (ps=16, tile_k=8 -> 2 tiles per page) and a
+    page table with -1 holes (clamped page-0 reads masked by kv_valid)."""
+    mp = 3
+    pcfg, cb = _cb(32)
+    scfg = sa.SparseAttentionConfig(pq=pcfg, top_fraction=0.25, min_l=4)
+    q, k_pool, v_pool, pt, kv_valid = _paged_case(ps, mp)
+    codes_pool = pq.assign(k_pool, cb).astype(jnp.int8)
+    scale = q.shape[-1] ** -0.5
+    out_p = sparse_mha_decode_paged(q, k_pool, v_pool, codes_pool, cb,
+                                    scfg, scale, kv_valid, pt,
+                                    tile_k=tile_k, interpret=True)
+    k_view = kvp.gather_pages(k_pool, pt)
+    v_view = kvp.gather_pages(v_pool, pt)
+    codes_view = kvp.gather_pages(codes_pool, pt)
+    out_g = k_decode(q, k_view, v_view, codes_view, cb, scfg, scale,
+                     kv_valid, tile_k=tile_k, interpret=True, fuse=True)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_g))
+
+
+@pytest.mark.parametrize("ps", [8, 16])
+def test_paged_native_dense_matches_jnp(ps):
+    """The dense paged-native decode kernel (SPT-off route) vs the jnp
+    dense oracle over the gathered view."""
+    q, k_pool, v_pool, pt, kv_valid = _paged_case(ps, mp=3, seed=29)
+    scale = q.shape[-1] ** -0.5
+    out_p = dense_mha_decode_paged(q, k_pool, v_pool, scale, kv_valid, pt,
+                                   tile_k=ps, interpret=True)
+    out_r = sa.dense_attention(q, kvp.gather_pages(k_pool, pt),
+                               kvp.gather_pages(v_pool, pt), scale,
+                               causal=False, kv_valid=kv_valid, chunk_q=1)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ------------------------------------------------------- dispatch gating
 def test_disable_kernels_env(monkeypatch):
     cfg = configs.get_smoke("qwen3-0.6b").with_spt(decode_attn_impl="kernel")
@@ -186,6 +263,29 @@ def test_disable_kernels_env(monkeypatch):
         auto.with_spt(attn_impl="pallas"))
     assert not dispatch.use_sparse_decode_kernel(
         cfg.with_spt(decode_attn_impl="jnp"))
+
+
+def test_fuse_and_paged_native_dispatch(monkeypatch):
+    """`decode_attn_fuse` picks the tier WITHIN the kernel path (one-pass
+    fused by default, two-pass for bisection); `kv_paged_native` picks
+    kernel-native page addressing vs the gathered-view fallback and honors
+    the kill switch like every other kernel route."""
+    jnp_cfg = configs.get_smoke("qwen3-0.6b")            # attn_impl="jnp"
+    cfg = jnp_cfg.with_spt(attn_impl="pallas")
+    assert dispatch.use_fused_decode_attn(cfg)           # auto -> fused
+    assert dispatch.use_fused_decode_attn(cfg.with_spt(
+        decode_attn_fuse="fused"))
+    assert not dispatch.use_fused_decode_attn(cfg.with_spt(
+        decode_attn_fuse="two_pass"))
+    assert dispatch.use_paged_native_decode(cfg)         # auto + pallas
+    assert not dispatch.use_paged_native_decode(jnp_cfg)  # auto + jnp
+    assert dispatch.use_paged_native_decode(jnp_cfg.with_spt(
+        kv_paged_native="kernel"))
+    assert not dispatch.use_paged_native_decode(cfg.with_spt(
+        kv_paged_native="gather"))
+    monkeypatch.setenv("REPRO_DISABLE_KERNELS", "1")
+    assert not dispatch.use_paged_native_decode(cfg.with_spt(
+        kv_paged_native="kernel"))                       # kill switch wins
 
 
 # ------------------------------------------------------------ engine e2e
