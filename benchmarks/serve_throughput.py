@@ -23,6 +23,7 @@ stand-in numbers per the repo convention (compare across PRs, not
 against TPU).
 """
 import argparse
+import dataclasses
 import json
 import time
 
@@ -207,6 +208,121 @@ def prefill_overlap_report(args) -> dict:
     return report
 
 
+def load_sweep_report(args) -> dict:
+    """Offered-QPS load sweep over the long-lived serve() loop: Poisson
+    arrivals at each swept rate vs the same workload as one burst run(),
+    reporting p50/p99 TTFT and TPOT — the SLO curve every production
+    serving paper reports.  TTFT is arrival-relative, so under light
+    continuous load it measures a mostly-idle engine while the burst rows
+    measure queueing depth.  The 'preemptive' rows serve mixed priorities
+    on a half-parity page pool, so priority preemption (evict + recompute
+    re-admission) actually fires under pressure.  Wall-clock CPU stand-in
+    per the repo convention — compare across PRs, not against TPU.
+    Writes BENCH_slo.json."""
+    from repro.serving.engine import ArrivalSchedule
+
+    cfg = _variant_cfg(configs.get_smoke(args.arch), "sparse")
+    cfg = cfg.with_spt(kv_layout="paged", kv_page_size=args.page_size)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    # background requests generate 4x longer than interactive ones so
+    # they actually HOLD their pages across many scheduling iterations —
+    # short uniform requests retire within an iteration or two and the
+    # pool is never saturated at the instant an interactive arrives
+    bg_gen = args.gen * 4
+    max_len = args.prompt_len + bg_gen + 8
+    parity = args.slots * kvp.num_pages(max_len, args.page_size)
+    reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen,
+                          ragged=True)
+    # phased priorities: long background (priority 0) arrives first and
+    # fills the pool, interactive (priority 1, TTFT deadline) arrives
+    # mid-run — the arrival pattern that makes priority preemption fire
+    # (alternating priorities never do: the priority-sorted queue would
+    # drain every interactive request before a background holds a page)
+    half = len(reqs) // 2
+    pre_reqs = [dataclasses.replace(
+        r, priority=0 if i < half else 1,
+        max_new_tokens=bg_gen if i < half else r.max_new_tokens,
+        deadline_s=None if i < half else 60.0)
+        for i, r in enumerate(reqs)]
+    qps_list = [float(q) for q in args.qps_sweep.split(",")]
+
+    def stats_row(eng, out, wall, mode, qps):
+        s = eng.last_stats
+        d = s.as_dict()
+        return {
+            "mode": mode, "offered_qps": qps,
+            "requests": len(out), "completed": s.completed,
+            "wall_s": round(wall, 2),
+            "achieved_qps": round(s.completed / max(wall, 1e-9), 2),
+            "ttft_p50_s": d["ttft_p50_s"], "ttft_p99_s": d["ttft_p99_s"],
+            "tpot_p50_s": d["tpot_p50_s"], "tpot_p99_s": d["tpot_p99_s"],
+            "preemptions": s.preemptions, "shed": s.shed,
+            "admission_stalls": s.admission_stalls,
+        }
+
+    rows = []
+    # preemptive pool: exactly one background's worst-case reservation —
+    # while a background decodes, an arriving interactive cannot reserve
+    # pages and the scheduler must evict (preempt + later recompute) to
+    # admit it
+    pool_pre = kvp.num_pages(args.prompt_len + bg_gen - 1, args.page_size)
+    eng = Engine(cfg, params, max_len=max_len, num_slots=args.slots,
+                 decode_chunk=args.decode_chunk, kv_pages=parity)
+    eng_pre = Engine(cfg, params, max_len=max_len, num_slots=args.slots,
+                     decode_chunk=args.decode_chunk, kv_pages=pool_pre)
+    # warmup: a burst run traces the full-group buckets, a fast serve
+    # traces the single-arrival admission + grown decode buckets — the
+    # timed passes below must measure scheduling, not jit
+    for e, rs in ((eng, reqs), (eng_pre, pre_reqs)):
+        e.run(rs)
+        e.run(rs[:1])                    # single/pair admission buckets
+        e.run(rs[:2])
+        e.serve(ArrivalSchedule.poisson(rs, max(qps_list), seed=0))
+    t0 = time.perf_counter()
+    out = eng.run(reqs)
+    rows.append(stats_row(eng, out, time.perf_counter() - t0, "burst",
+                          None))
+    for qps in qps_list:
+        t0 = time.perf_counter()
+        out = eng.serve(ArrivalSchedule.poisson(reqs, qps, seed=0))
+        rows.append(stats_row(eng, out, time.perf_counter() - t0,
+                              "poisson", qps))
+        t0 = time.perf_counter()
+        out = eng_pre.serve(ArrivalSchedule.poisson(pre_reqs, qps, seed=0))
+        rows.append(stats_row(eng_pre, out, time.perf_counter() - t0,
+                              "preemptive", qps))
+    burst = rows[0]
+    low = min((r for r in rows if r["mode"] == "poisson"),
+              key=lambda r: r["offered_qps"])
+    report = {
+        "note": scale_note(),
+        "config": {"arch": cfg.name, "slots": args.slots,
+                   "requests": args.requests,
+                   "prompt_len": args.prompt_len, "gen": args.gen,
+                   "bg_gen": bg_gen,
+                   "decode_chunk": args.decode_chunk,
+                   "page_size": args.page_size,
+                   "kv_pages": {"poisson": parity,
+                                "preemptive": pool_pre},
+                   "qps_sweep": qps_list,
+                   "workload": "ragged [L/2, L]; preemptive rows: "
+                               "phased — long low-priority background "
+                               "first, interactive (deadline) later, "
+                               "pool sized for one background"},
+        "rows": rows,
+        "summary": {
+            "all_served": float(all(r["completed"] + r["shed"]
+                                    == r["requests"] for r in rows)),
+            "preemptions_total": sum(r["preemptions"] for r in rows),
+            "burst_over_lowqps_ttft_p99": round(
+                burst["ttft_p99_s"] / max(low["ttft_p99_s"], 1e-9), 2),
+        },
+    }
+    with open("BENCH_slo.json", "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -233,8 +349,19 @@ def main():
                     help="run the contiguous-vs-paged KV-memory comparison "
                          "at --paging-max-len and write BENCH_paging.json")
     ap.add_argument("--paging-max-len", type=int, default=8192)
+    ap.add_argument("--load-sweep", action="store_true",
+                    help="sweep offered QPS through the long-lived serve() "
+                         "loop (Poisson arrivals; burst + FIFO + "
+                         "priority-preemptive modes) and write the "
+                         "p50/p99 TTFT/TPOT SLO curve to BENCH_slo.json")
+    ap.add_argument("--qps-sweep", default="2,6,18",
+                    help="comma list of offered arrival rates for "
+                         "--load-sweep")
     args = ap.parse_args()
 
+    if args.load_sweep:
+        print(json.dumps(load_sweep_report(args), indent=1))
+        return
     if args.paging:
         print(json.dumps(paging_report(args), indent=1))
         return

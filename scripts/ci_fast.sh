@@ -34,3 +34,12 @@ if [[ "${REPRO_SKIP_ANALYSIS:-0}" != "1" ]]; then
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m "not slow" "$@"
+# Fixed-seed chaos soak on the long-lived serving loop: Poisson arrivals
+# + injected cancels / duplicate + oversized submissions / forced
+# preemption, with slot-leak and page-conservation invariants asserted
+# after every scheduling iteration (exit 1 on any violation or lost
+# request).  Shorter than the pytest matrix soaks but on top of them:
+# this is the exact command a builder can re-run standalone to bisect a
+# scheduler leak.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.serving.chaos --requests 16 --seed 0

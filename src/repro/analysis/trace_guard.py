@@ -185,13 +185,18 @@ def no_implicit_transfers():
 
 @audit("trace")
 def _trace_audit() -> List[Violation]:
-    """Serve a tiny two-request run end-to-end under the guard: the
-    compiled chunk must trace once per (slots, max_gen, ...) bucket and
-    the batched prefill once per (Bp, S) bucket."""
+    """Serve a tiny run end-to-end under the guard: the compiled chunk
+    must trace once per (slots, max_gen, ...) bucket and the batched
+    prefill once per (Bp, S) bucket.  Then drive the LONG-LIVED loop —
+    continuous Poisson arrivals on a virtual clock, a mid-stream cancel,
+    and a forced preemption whose victim re-admits by recompute — under
+    the same guard: per-arrival scheduling must reuse the already-traced
+    buckets, not compile per event."""
     from repro import configs
     import dataclasses as dc
     from repro.core.params import init_tree
-    from repro.serving.engine import Engine, Request
+    from repro.serving.engine import (ArrivalSchedule, Engine,
+                                      ManualClock, Request)
     from repro.train.state import model_defs
 
     cfg = dc.replace(
@@ -206,7 +211,21 @@ def _trace_audit() -> List[Violation]:
     reqs = [Request(uid=i, tokens=rng.integers(0, 256, size=ln).tolist(),
                     max_new_tokens=4)
             for i, ln in enumerate([5, 9, 12])]
+    arrivals = [Request(uid=10 + i, priority=i % 2,
+                        tokens=rng.integers(0, 256, size=ln).tolist(),
+                        max_new_tokens=6)
+                for i, ln in enumerate([4, 7, 11, 6, 9, 13])]
+    fired = {"preempt": False}
+
+    def chaos(e, iteration):
+        if iteration == 3:
+            e.cancel(12)
+        if iteration >= 4 and not fired["preempt"]:
+            fired["preempt"] = e.preempt()
+
     eng = Engine(cfg, params, max_len=32, num_slots=2, decode_chunk=4)
     with guard_engine(eng, raise_on_violation=False) as guard:
         eng.run(reqs)
+        eng.serve(ArrivalSchedule.poisson(arrivals, 4.0, seed=0),
+                  clock=ManualClock(dt=0.25), on_iteration=chaos)
     return guard.violations()

@@ -101,6 +101,22 @@ def main() -> int:
                     help="max queued requests drained per batched ragged "
                          "prefill call (default: --slots; 1 = the old "
                          "serial batch-1 admission)")
+    ap.add_argument("--arrival-qps", type=float, default=None,
+                    help="serve through the long-lived loop with seeded "
+                         "Poisson arrivals at this offered rate instead of "
+                         "one burst (engine.serve(); stats add p50/p99 "
+                         "TTFT/TPOT, preemptions, shed)")
+    ap.add_argument("--priorities", action="store_true",
+                    help="phased priority workload: first half of the "
+                         "requests are background (priority 0), second "
+                         "half interactive (priority 1) — under page-pool "
+                         "pressure the scheduler preempts backgrounds and "
+                         "re-admits them by recompute")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="TTFT deadline for the interactive requests "
+                         "(all requests without --priorities): a queued "
+                         "request past its deadline is shed, and one past "
+                         "half of it may preempt deadline-free peers")
     ap.add_argument("--prefill-decode-ratio", type=float, default=0.0,
                     help="overlap knob: with decodes in flight, admit at "
                          "most ratio * decode_chunk * active_slots prompt "
@@ -135,15 +151,33 @@ def main() -> int:
         reqs = build_requests(cfg, args.requests, args.prompt_len, args.gen,
                               args.ragged, top_k=args.top_k,
                               top_p=args.top_p)
-
         # warmup: absorbs tracing + compilation for every shape in the run
+        # (deadlines/priorities are applied AFTER it — a deadline shorter
+        # than compile time would shed the very requests being traced)
         t0 = time.perf_counter()
         engine.run(reqs, temperature=args.temperature, key=key)
         warmup_wall_s = time.perf_counter() - t0
+        if args.priorities or args.deadline_s is not None:
+            import dataclasses as _dc
+            half = len(reqs) // 2
+            reqs = [_dc.replace(
+                r,
+                priority=(0 if args.priorities and i < half
+                          else 1 if args.priorities else r.priority),
+                deadline_s=(args.deadline_s
+                            if (not args.priorities or i >= half)
+                            else None))
+                for i, r in enumerate(reqs)]
 
         # steady state: compiled throughout, synced at every boundary
         t0 = time.perf_counter()
-        result = engine.run(reqs, temperature=args.temperature, key=key)
+        if args.arrival_qps is not None:
+            from repro.serving.engine import ArrivalSchedule
+            result = engine.serve(
+                ArrivalSchedule.poisson(reqs, args.arrival_qps, seed=0),
+                temperature=args.temperature, key=key)
+        else:
+            result = engine.run(reqs, temperature=args.temperature, key=key)
         wall_s = time.perf_counter() - t0
         stats = engine.last_stats
     print(json.dumps({

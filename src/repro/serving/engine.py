@@ -61,7 +61,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +112,74 @@ def decode_cache_axes(cfg: ModelConfig, kv_paged: bool = False):
     return transformer.cache_axes(cfg, kv_paged=kv_paged)
 
 
+# ---------------------------------------------------------------- arrivals
+class ManualClock:
+    """Deterministic serve clock: ``clock()`` reads virtual time, and the
+    serve loop calls ``advance()`` once per scheduling iteration.  The
+    chaos/robustness suites drive arrivals, deadlines, and preemption off
+    this clock so every run is a pure function of the seed — no wall-clock
+    flake.  Production serving uses the default wall clock instead."""
+
+    def __init__(self, dt: float = 1.0):
+        self.now = 0.0
+        self.dt = float(dt)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self) -> None:
+        self.now += self.dt
+
+
+class ArrivalSchedule:
+    """An arrival process feeding ``Engine.serve``: (t_s, Request) events
+    in time order, popped as the serve clock passes each arrival time.
+
+    Build one from a Poisson process (``poisson``), an explicit trace
+    (``from_trace``), or an all-at-t=0 burst (``burst`` — equivalent to
+    the legacy ``Engine.run`` workload)."""
+
+    def __init__(self, events: Sequence[Tuple[float, Request]]):
+        self._events = sorted(events, key=lambda e: e[0])      # stable
+        self._i = 0
+
+    @classmethod
+    def burst(cls, requests: Sequence[Request],
+              at: float = 0.0) -> "ArrivalSchedule":
+        return cls([(at, r) for r in requests])
+
+    @classmethod
+    def poisson(cls, requests: Sequence[Request], rate_qps: float,
+                seed: int = 0) -> "ArrivalSchedule":
+        """Seeded Poisson arrivals at ``rate_qps`` mean offered load."""
+        rng = np.random.default_rng(seed)
+        t, events = 0.0, []
+        for r in requests:
+            t += float(rng.exponential(1.0 / max(rate_qps, 1e-9)))
+            events.append((t, r))
+        return cls(events)
+
+    @classmethod
+    def from_trace(cls, pairs: Sequence[Tuple[float, Request]]
+                   ) -> "ArrivalSchedule":
+        return cls(list(pairs))
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self._events)
+
+    def next_time(self) -> Optional[float]:
+        return None if self.exhausted else self._events[self._i][0]
+
+    def due(self, now: float) -> List[Request]:
+        out = []
+        while (self._i < len(self._events)
+               and self._events[self._i][0] <= now):
+            out.append(self._events[self._i][1])
+            self._i += 1
+        return out
+
+
 # ---------------------------------------------------------------- requests
 @dataclasses.dataclass
 class Request:
@@ -128,14 +196,29 @@ class Request:
     temperature: Optional[float] = None
     top_k: int = 0
     top_p: float = 0.0
+    # long-lived serving (Engine.serve):
+    # priority — higher admits first; under slot/page pressure a queued
+    #   request may preempt a strictly-lower-priority running one.
+    # deadline_s — TTFT target in serve-clock seconds after arrival; a
+    #   queued request whose deadline lapses before its first token is
+    #   shed (finish_reason="shed") instead of occupying the queue, and a
+    #   deadline at >= 50% of its budget makes the request "urgent"
+    #   (may preempt deadline-free peers of equal priority).
+    # on_token — per-token streaming callback (uid, token_id, done),
+    #   called from the host scheduler as tokens leave each decode chunk.
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    on_token: Optional[Callable[[int, int, bool], None]] = None
 
 
 @dataclasses.dataclass
 class Completion:
     uid: int
     tokens: List[int]                      # generated ids (EOS included)
-    finish_reason: str                     # "eos" | "length"
+    finish_reason: str     # "eos"|"length"|"rejected"|"cancelled"|"shed"
     prompt_len: int
+    detail: str = ""                       # reject/shed reason, else ""
+    preemptions: int = 0                   # evict+resume count for this uid
 
 
 @dataclasses.dataclass
@@ -152,6 +235,15 @@ class ServeStats:
     prefill_batches: int = 0               # batched prefill calls issued
     ttft_s_sum: float = 0.0                # sum over admitted requests of
     ttft_s_max: float = 0.0                # (first token ready - run start)
+    # long-lived serving (zeros for plain burst runs)
+    submitted: int = 0                     # requests offered (incl. rejects)
+    preemptions: int = 0                   # slot evictions under pressure
+    rejections: int = 0                    # invalid requests isolated
+    cancelled: int = 0                     # cancel() mid-queue/mid-stream
+    shed: int = 0                          # TTFT deadline lapsed in queue
+    # per-request latency samples (wall clock; percentiles in as_dict)
+    ttft_samples: List[float] = dataclasses.field(default_factory=list)
+    tpot_samples: List[float] = dataclasses.field(default_factory=list)
     # paged KV cache (zeros when kv_layout="contiguous")
     page_size: int = 0
     kv_pages_total: int = 0                # pool capacity in pages
@@ -170,7 +262,30 @@ class ServeStats:
     def ttft_avg_s(self) -> float:
         """Mean time-to-first-token (the first token comes out of prefill,
         so this is prefill latency + any queueing behind earlier groups)."""
-        return self.ttft_s_sum / self.admitted if self.admitted else 0.0
+        return (sum(self.ttft_samples) / len(self.ttft_samples)
+                if self.ttft_samples else 0.0)
+
+    @staticmethod
+    def _pctl(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    @property
+    def ttft_p50_s(self) -> float:
+        return self._pctl(self.ttft_samples, 50)
+
+    @property
+    def ttft_p99_s(self) -> float:
+        return self._pctl(self.ttft_samples, 99)
+
+    @property
+    def tpot_p50_s(self) -> float:
+        """Median per-request time-per-output-token (completion wall time
+        after the first token, over tokens generated after it)."""
+        return self._pctl(self.tpot_samples, 50)
+
+    @property
+    def tpot_p99_s(self) -> float:
+        return self._pctl(self.tpot_samples, 99)
 
     @property
     def prefill_batch_occupancy(self) -> float:
@@ -193,6 +308,14 @@ class ServeStats:
                     self.prefill_batch_occupancy, 2),
                 "ttft_avg_s": round(self.ttft_avg_s, 4),
                 "ttft_max_s": round(self.ttft_s_max, 4),
+                "ttft_p50_s": round(self.ttft_p50_s, 4),
+                "ttft_p99_s": round(self.ttft_p99_s, 4),
+                "tpot_p50_s": round(self.tpot_p50_s, 5),
+                "tpot_p99_s": round(self.tpot_p99_s, 5),
+                "preemptions": self.preemptions,
+                "rejections": self.rejections,
+                "cancelled": self.cancelled,
+                "shed": self.shed,
                 **({"page_size": self.page_size,
                     "kv_pages_total": self.kv_pages_total,
                     "kv_pages_peak": self.kv_pages_peak,
@@ -204,6 +327,77 @@ class ServeStats:
 class GenerationResult:
     tokens: List[List[int]]
     steps: int
+
+
+# ------------------------------------------------------- scheduler state
+@dataclasses.dataclass
+class _QItem:
+    """A request's live scheduling record: queued, running in a slot, or
+    re-queued after preemption (``done`` holds the tokens generated before
+    eviction; re-admission recomputes their KV via the batched ragged
+    prefill and forces the last one as the resume token, so the stream
+    continues bit-identically)."""
+    req: Request
+    order: int                             # submission order (stable key)
+    arrival_s: float                       # serve-clock arrival time
+    temp: float                            # resolved sampling temperature
+    done: List[int] = dataclasses.field(default_factory=list)
+    arrival_wall: float = 0.0              # wall clock at submit (TTFT base)
+    first_tok_wall: Optional[float] = None
+    preemptions: int = 0
+
+    def prefill_tokens(self) -> List[int]:
+        """Tokens to (re)compute through prefill: the prompt, plus — when
+        resuming — every generated token except the last (which becomes
+        the pending decode input, exactly like a fresh admission's
+        prefill-sampled first token)."""
+        if self.done:
+            return list(self.req.tokens) + self.done[:-1]
+        return list(self.req.tokens)
+
+
+@dataclasses.dataclass
+class _SchedState:
+    """Mutable state of one serve()/run() — held on ``Engine._live`` so
+    submit()/cancel()/preempt() and the chaos watchdog can reach it
+    mid-loop."""
+    stats: ServeStats
+    clock: Callable[[], float]
+    eos_id: Optional[int]
+    greedy: bool
+    use_topp: bool
+    base_key: jax.Array
+    max_gen: int
+    caches: Any
+    page_table: Any
+    astate: Any
+    reserved: int
+    slot_ws: List[int]
+    tok: Any
+    pos: Any
+    active: Any
+    n_gen: Any
+    limit: Any
+    buf: Any
+    keys: Any
+    temps: Any
+    topks: Any
+    topps: Any
+    slot_item: List[Optional[_QItem]]
+    queue: List[_QItem]
+    results: Dict[int, Completion]
+    seen_uids: set
+    default_temp: float
+    order: int = 0
+    iteration: int = 0
+    t0_wall: float = 0.0
+
+
+def _queue_key(it: _QItem) -> Tuple[int, int]:
+    """Admission order: priority descending, then submission order (a
+    preempted request keeps its original order, so it re-admits ahead of
+    later arrivals of its priority class)."""
+    return (-it.req.priority, it.order)
 
 
 # ---------------------------------------------------------------- engine
@@ -232,6 +426,9 @@ class Engine:
         self.pad_id = pad_id
         self.last_stats: Optional[ServeStats] = None
         self._use_jit = jit
+        # live scheduler state while serve()/run() is on the stack —
+        # submit()/cancel()/preempt() and the chaos watchdog read it
+        self._live: Optional[_SchedState] = None
         # disaggregated prefill scheduler: up to prefill_batch queued
         # requests drain through ONE batched ragged prefill call per
         # admission group (prefill_batch=1 == the old serial admission).
@@ -343,25 +540,28 @@ class Engine:
             self._prefill_one = jax.jit(fn) if self._use_jit else fn
         return self._prefill_one
 
-    def _prefill_group(self, group: Sequence[Request]):
+    def _prefill_group(self, group: Sequence["_QItem"]):
         """ONE batched ragged prefill over an admission group: rows are
         right-padded to a joint (Bp, S) bucket (dummy rows fill the Bp
         bucket; their results are discarded and their cache rows dropped
-        by the scatter).  Returns (cache_rows, logits (Bpb, 1, V), Bpb)."""
+        by the scatter).  Resumed (preempted) rows prefill prompt +
+        regenerated tokens — the recompute path.  Returns (cache_rows,
+        logits (Bpb, 1, V), Bpb)."""
         cfg = self.cfg
         frontend = cfg.frontend_tokens if cfg.frontend else 0
-        p = self._pad_len(max(len(r.tokens) for r in group))
+        rows_toks = [it.prefill_tokens() for it in group]
+        p = self._pad_len(max(len(t) for t in rows_toks))
         bpb = self._pad_rows(len(group))
         toks = np.full((bpb, p), self.pad_id, np.int32)
         lens = np.ones(bpb, np.int32)                  # dummies: length 1
-        for i, r in enumerate(group):
-            toks[i, :len(r.tokens)] = np.asarray(r.tokens, np.int32)
-            lens[i] = len(r.tokens)
+        for i, t in enumerate(rows_toks):
+            toks[i, :len(t)] = np.asarray(t, np.int32)
+            lens[i] = len(t)
         batch = {"tokens": jnp.asarray(toks)}
         if frontend:
             fe = np.zeros((bpb, frontend, cfg.d_model), np.float32)
-            for i, r in enumerate(group):
-                fe[i] = np.asarray(r.frontend_embeds).reshape(
+            for i, it in enumerate(group):
+                fe[i] = np.asarray(it.req.frontend_embeds).reshape(
                     frontend, cfg.d_model)
             batch["frontend_embeds"] = jnp.asarray(fe)
         lengths = jnp.asarray(frontend + lens, jnp.int32)
@@ -486,283 +686,620 @@ class Engine:
         return chunk
 
     # ---------------------------------------------------------- scheduler
-    def run(self, requests: Sequence[Request], *, temperature: float = 0.0,
-            key: Optional[jax.Array] = None,
-            eos_id: Any = "engine-default") -> List[Completion]:
-        """Serve `requests` (any count vs. `num_slots`) to completion.
+    def _pages_ws(self, req: Request) -> int:
+        """Worst-case pages ``req`` can ever hold: one per page of rows
+        [0, prompt_end + max_new - 1) — the last decode write lands at
+        position prompt_end + max_new - 2.  Identical for a resumed item
+        (regenerated tokens refill the same decode rows)."""
+        frontend = self.cfg.frontend_tokens if self.cfg.frontend else 0
+        rows = frontend + len(req.tokens) + req.max_new_tokens - 1
+        return kvp.num_pages(max(1, rows), self.page_size)
 
-        Returns completions in request order; wall-clock split is left in
-        `self.last_stats`."""
+    def _validate(self, req: Request, seen: set) -> Optional[str]:
+        """Reason ``req`` must be rejected, or None.  Failure isolation:
+        a bad request becomes Completion(finish_reason="rejected") while
+        the rest of the workload keeps serving (the pre-PR-8 engine
+        raised ValueError and aborted every other request)."""
+        cfg = self.cfg
+        frontend = cfg.frontend_tokens if cfg.frontend else 0
+        if req.uid in seen:
+            return f"duplicate request uid {req.uid}"
+        if req.max_new_tokens < 1:
+            return "max_new_tokens < 1"
+        if frontend and req.frontend_embeds is None:
+            return (f"{cfg.name} has a {cfg.frontend} frontend; "
+                    "frontend_embeds is required")
+        need = frontend + len(req.tokens) + req.max_new_tokens
+        if need > self.max_len:
+            return f"needs {need} positions > max_len={self.max_len}"
+        if self._paged and self._pages_ws(req) > self.kv_pages:
+            return (f"needs {self._pages_ws(req)} KV pages > pool size "
+                    f"{self.kv_pages}")
+        return None
+
+    # ------------------------------------------------- long-lived API
+    def submit(self, req: Request, now: Optional[float] = None) -> bool:
+        """Queue ``req`` into the live serve()/run() loop — callable from
+        arrival schedules, chaos injectors, or streaming callbacks while
+        the loop runs.  Returns False when the request is rejected; the
+        rejection is a Completion in the results, never an exception."""
+        st = self._live
+        if st is None:
+            raise RuntimeError("submit() requires a live serve()/run()")
+        if now is None:
+            now = st.clock()
+        order = st.order
+        st.order += 1
+        st.stats.submitted += 1
+        why = self._validate(req, st.seen_uids)
+        if why is not None:
+            st.stats.rejections += 1
+            st.results[order] = Completion(
+                uid=req.uid, tokens=[], finish_reason="rejected",
+                prompt_len=len(req.tokens), detail=why)
+            return False
+        st.seen_uids.add(req.uid)
+        temp = (st.default_temp if req.temperature is None
+                else req.temperature)
+        if (not st.greedy) and 0.0 < req.top_p < 1.0:
+            st.use_topp = True
+        self._grow_gen(req.max_new_tokens)
+        st.queue.append(_QItem(req=req, order=order, arrival_s=now,
+                               temp=temp,
+                               arrival_wall=time.perf_counter()))
+        st.queue.sort(key=_queue_key)
+        return True
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request: frees its slot/pages and
+        finishes it as Completion(finish_reason="cancelled") carrying the
+        tokens generated so far.  False when the uid is not live."""
+        st = self._live
+        if st is None:
+            return False
+        for qi, it in enumerate(st.queue):
+            if it.req.uid == uid:
+                del st.queue[qi]
+                st.stats.cancelled += 1
+                st.results[it.order] = Completion(
+                    uid=uid, tokens=list(it.done),
+                    finish_reason="cancelled",
+                    prompt_len=len(it.req.tokens),
+                    detail="cancelled while queued",
+                    preemptions=it.preemptions)
+                return True
+        for b, it in enumerate(st.slot_item):
+            if it is not None and it.req.uid == uid:
+                st.stats.cancelled += 1
+                st.results[it.order] = Completion(
+                    uid=uid, tokens=st.buf[b, :st.n_gen[b]].tolist(),
+                    finish_reason="cancelled",
+                    prompt_len=len(it.req.tokens),
+                    detail="cancelled mid-stream",
+                    preemptions=it.preemptions)
+                self._release_slot(b)
+                return True
+        return False
+
+    def preempt(self, uid: Optional[int] = None) -> bool:
+        """Force-preempt an active request (chaos harness / external
+        policy): saves its progress, frees its slot and pages, and
+        re-queues it for recompute re-admission.  ``uid`` None picks the
+        default victim (lowest priority, most recently admitted).
+        Returns False when nothing matches."""
+        st = self._live
+        if st is None:
+            return False
+        if uid is None:
+            b = self._pick_victim(None, False)
+            if b is None:
+                return False
+            self._preempt_slot(b)
+            return True
+        for b, it in enumerate(st.slot_item):
+            if it is not None and it.req.uid == uid and st.active[b]:
+                self._preempt_slot(b)
+                return True
+        return False
+
+    # ------------------------------------------------ slot-state plumbing
+    def _grow_gen(self, need: int) -> None:
+        """Grow the per-slot output buffer to a power-of-2 token-budget
+        bucket, so chunk retraces stay O(log max_gen) as arrivals raise
+        the budget mid-serve (burst run() presizes the exact maximum and
+        never grows — the PR 5 trace behavior)."""
+        st = self._live
+        if need <= st.max_gen:
+            return
+        new = max(8, st.max_gen)
+        while new < need:
+            new <<= 1
+        st.buf = np.pad(st.buf, ((0, 0), (0, new - st.buf.shape[1])))
+        st.max_gen = new
+
+    def _release_slot(self, b: int) -> None:
+        """Return slot b to the free pool — retire, cancel, and preempt
+        all land here: paged pages go back through the refcount-aware
+        free path and the host-side worst-case reservation is dropped."""
+        st = self._live
+        st.slot_item[b] = None
+        st.active[b] = False
+        if self._paged:
+            st.astate, st.page_table = self._free_slot(
+                st.astate, st.page_table, jnp.int32(b))
+            st.reserved -= st.slot_ws[b]
+            st.slot_ws[b] = 0
+
+    def _retire(self, b: int) -> None:
+        st = self._live
+        it = st.slot_item[b]
+        toks = st.buf[b, :st.n_gen[b]].tolist()
+        reason = ("eos" if st.eos_id is not None and toks
+                  and toks[-1] == st.eos_id else "length")
+        now_wall = time.perf_counter()
+        if it.first_tok_wall is not None and int(st.n_gen[b]) > 1:
+            st.stats.tpot_samples.append(
+                (now_wall - it.first_tok_wall) / (int(st.n_gen[b]) - 1))
+        st.results[it.order] = Completion(
+            uid=it.req.uid, tokens=toks, finish_reason=reason,
+            prompt_len=len(it.req.tokens), preemptions=it.preemptions)
+        st.stats.completed += 1
+        self._release_slot(b)
+
+    def _track_peak(self) -> None:
+        st = self._live
+        if self._paged:
+            used = self.kv_pages - int(jax.device_get(st.astate["top"]))
+            st.stats.kv_pages_peak = max(st.stats.kv_pages_peak, used)
+
+    def _preempt_slot(self, b: int) -> None:
+        """Evict slot b: save its generated tokens on the queue item,
+        free its pages/slot, and re-queue it — re-admission recomputes
+        the KV through the batched ragged prefill (prefill_tokens) and
+        resumes the token stream bit-identically."""
+        st = self._live
+        it = st.slot_item[b]
+        it.done = st.buf[b, :st.n_gen[b]].tolist()
+        it.preemptions += 1
+        st.stats.preemptions += 1
+        self._release_slot(b)
+        st.queue.append(it)
+        st.queue.sort(key=_queue_key)
+
+    def _pick_victim(self, cand: Optional[_QItem],
+                     urgent: bool) -> Optional[int]:
+        """Lowest-priority, most-recently-admitted active slot that
+        ``cand`` may evict: strictly lower priority, or — when cand's
+        TTFT deadline is at risk (urgent) — a deadline-free peer of
+        equal priority.  cand None (forced preemption) matches any
+        active slot."""
+        st = self._live
+        best = None
+        for b, it in enumerate(st.slot_item):
+            if it is None or not st.active[b]:
+                continue
+            if cand is not None:
+                lower = it.req.priority < cand.req.priority
+                peer = (urgent and it.req.priority == cand.req.priority
+                        and it.req.deadline_s is None)
+                if not (lower or peer):
+                    continue
+            key = (it.req.priority, -it.order)
+            if best is None or key < best[0]:
+                best = (key, b)
+        return None if best is None else best[1]
+
+    def _shed_expired(self, now: float) -> None:
+        """Drop queued requests whose TTFT deadline already lapsed — they
+        cannot meet their SLO, so shedding them protects the requests
+        that still can (resumed items already produced their first token
+        and are never shed)."""
+        st = self._live
+        keep = []
+        for it in st.queue:
+            d = it.req.deadline_s
+            if (d is not None and it.first_tok_wall is None
+                    and now - it.arrival_s > d):
+                st.stats.shed += 1
+                st.results[it.order] = Completion(
+                    uid=it.req.uid, tokens=[], finish_reason="shed",
+                    prompt_len=len(it.req.tokens),
+                    detail=f"TTFT deadline {d}s lapsed in queue",
+                    preemptions=it.preemptions)
+            else:
+                keep.append(it)
+        st.queue = keep
+
+    def _pressure_preempt(self, now: float) -> None:
+        """Slot / page-pool pressure: when the head-of-queue request
+        cannot fit, evict strictly-lower-priority victims (or, for a
+        deadline-at-risk head, deadline-free equal-priority peers) until
+        it fits or no eligible victim remains.  Uniform-priority burst
+        workloads never trigger this, so run() stays bit-identical to
+        the PR 5 scheduler."""
+        st = self._live
+        if not st.queue:
+            return
+        cand = st.queue[0]
+
+        def blocked() -> bool:
+            if not any(s is None for s in st.slot_item):
+                return True
+            return (self._paged and self._pages_ws(cand.req)
+                    > self.kv_pages - st.reserved)
+
+        d = cand.req.deadline_s
+        urgent = (d is not None and cand.first_tok_wall is None
+                  and now - cand.arrival_s >= 0.5 * d)
+        guard = 0
+        while blocked() and guard < self.num_slots:
+            b = self._pick_victim(cand, urgent)
+            if b is None:
+                break
+            self._preempt_slot(b)
+            guard += 1
+        if guard:
+            # the eviction was FOR cand: re-queued victims of equal
+            # priority carry an older submission order and would outrank
+            # it at admission (starvation thrash — evict, re-admit the
+            # victim, repeat until cand sheds), so cand keeps the head.
+            st.queue.remove(cand)
+            st.queue.insert(0, cand)
+
+    # -------------------------------------------------- admission + decode
+    def _form_group(self, stalled_seen: set) -> List[_QItem]:
+        """Scan the queue IN ORDER (priority-major, then submission) for
+        the next admission group: up to prefill_batch requests that have
+        a free slot and (paged) a worst-case page reservation.  A request
+        that does not fit the page pool is counted as a stall (once per
+        scheduling iteration — ``stalled_seen`` dedups across the
+        admission loop's passes) and SKIPPED — it must not
+        head-of-line-block later rows that do fit; it retries every
+        iteration and admits once retiring slots release their
+        reservations.  Non-ragged-batchable stacks (rec/ssd states, SWA
+        rings) group equal-length rows only (no right-padding).  With
+        overlap enabled and decodes in flight, the group is bounded by
+        the prefill token budget (always >= 1 request, so admission
+        cannot starve)."""
+        st = self._live
+        free = sum(1 for s in st.slot_item if s is None)
+        if not free or not st.queue:
+            return []
+        budget = None
+        if self.prefill_decode_ratio > 0 and st.active.any():
+            budget = max(1, int(self.prefill_decode_ratio
+                                * self.decode_chunk
+                                * int(st.active.sum())))
+        ragged_ok = self._ragged_batchable()
+        group: List[_QItem] = []
+        picked: List[int] = []
+        group_ws = group_tokens = 0
+        for qi, it in enumerate(st.queue):
+            if len(group) == min(free, self.prefill_batch):
+                break
+            ptoks = len(it.prefill_tokens())
+            if (budget is not None and group
+                    and group_tokens + ptoks > budget):
+                break
+            if (not ragged_ok and group
+                    and ptoks != len(group[0].prefill_tokens())):
+                continue
+            if (self._paged
+                    and self._pages_ws(it.req) > self.kv_pages
+                    - st.reserved - group_ws):
+                if it.req.uid not in stalled_seen:
+                    stalled_seen.add(it.req.uid)
+                    st.stats.admission_stalls += 1
+                continue
+            group.append(it)
+            picked.append(qi)
+            group_ws += self._pages_ws(it.req) if self._paged else 0
+            group_tokens += ptoks
+        for qi in reversed(picked):
+            del st.queue[qi]
+        return group
+
+    def _stream(self, it: _QItem, toks: Sequence[int], done: bool) -> None:
+        cb = it.req.on_token
+        if cb is None:
+            return
+        for j, t in enumerate(toks):
+            cb(it.req.uid, int(t), done and j == len(toks) - 1)
+
+    def _admit(self, group: List[_QItem]) -> None:
+        """ONE batched prefill + ONE jit scatter (and, paged, ONE page
+        allocation) admits the whole group — the serial engine paid a
+        host round-trip per request.  Resumed (preempted) rows force
+        their last generated token as the pending decode input instead
+        of sampling from the prefill logits."""
+        st = self._live
+        cfg = self.cfg
+        frontend = cfg.frontend_tokens if cfg.frontend else 0
+        ps = self.page_size
+        t0 = time.perf_counter()
+        rows, logits, bpb = self._prefill_group(group)
+        slot_vec = np.full(bpb, -1, np.int32)   # -1 rows: dummies, drop
+        assigned: List[int] = []
+        for i, it in enumerate(group):
+            b = next(j for j, s in enumerate(st.slot_item) if s is None)
+            st.slot_item[b] = it
+            assigned.append(b)
+            slot_vec[i] = b
+        if self._paged:
+            npages = np.zeros(bpb, np.int32)
+            for i, it in enumerate(group):
+                ws = self._pages_ws(it.req)
+                st.reserved += ws
+                st.slot_ws[assigned[i]] = ws
+                npages[i] = kvp.num_pages(
+                    frontend + len(it.prefill_tokens()), ps)
+            st.astate, st.page_table = self._alloc_rows(
+                st.astate, st.page_table, jnp.asarray(slot_vec),
+                jnp.asarray(npages))
+            st.caches = self._write_rows(st.caches, rows,
+                                         jnp.asarray(slot_vec),
+                                         st.page_table)
+        else:
+            st.caches = self._write_rows(st.caches, rows,
+                                         jnp.asarray(slot_vec))
+        logits = jax.block_until_ready(logits)
+        jax.block_until_ready(st.caches)
+        now_wall = time.perf_counter()
+        st.stats.prefill_s += now_wall - t0
+        st.stats.prefill_batches += 1
+        st.stats.prefill_tokens += sum(
+            len(it.prefill_tokens()) for it in group)
+        st.stats.admitted += len(group)
+        for i, it in enumerate(group):
+            b = assigned[i]
+            r = it.req
+            skey = jax.random.fold_in(st.base_key, r.uid)
+            st.keys[b] = np.asarray(skey, np.uint32)
+            st.temps[b] = it.temp
+            st.topks[b] = r.top_k
+            st.topps[b] = r.top_p
+            st.limit[b] = r.max_new_tokens
+            st.buf[b] = 0
+            if it.done:                         # resume after preemption
+                nd = len(it.done)
+                st.buf[b, :nd] = it.done
+                st.tok[b] = it.done[-1]
+                st.pos[b] = frontend + len(it.prefill_tokens())
+                st.n_gen[b] = nd
+                done_now = (nd >= r.max_new_tokens
+                            or (st.eos_id is not None
+                                and it.done[-1] == st.eos_id))
+                st.active[b] = not done_now
+                if done_now:
+                    self._retire(b)
+                continue
+            lg = np.asarray(logits[i, -1], np.float32)
+            if st.greedy or it.temp <= 0.0:
+                first = int(lg.argmax())
+            else:
+                scaled = lg / max(it.temp, 1e-6)
+                if r.top_k > 0:
+                    thr = np.sort(scaled)[::-1][
+                        min(r.top_k, scaled.size) - 1]
+                    scaled = np.where(scaled < thr, -np.inf, scaled)
+                if 0.0 < r.top_p < 1.0:
+                    srt = np.sort(lg / max(it.temp, 1e-6))[::-1]
+                    e = np.exp(srt - srt[0])
+                    probs = e / e.sum()
+                    cum = np.cumsum(probs)
+                    kcnt = max(1, int(((cum - probs) < r.top_p).sum()))
+                    scaled = np.where(scaled < srt[kcnt - 1],
+                                      -np.inf, scaled)
+                first = int(jax.random.categorical(
+                    jax.random.fold_in(skey, 0), jnp.asarray(scaled)))
+            # TTFT is arrival-relative: for a burst every arrival_wall is
+            # the serve start (the legacy semantics); under continuous
+            # arrivals a late request is not charged for time it did not
+            # wait.
+            ttft = now_wall - it.arrival_wall
+            st.stats.ttft_s_sum += ttft
+            st.stats.ttft_s_max = max(st.stats.ttft_s_max, ttft)
+            st.stats.ttft_samples.append(ttft)
+            it.first_tok_wall = now_wall
+            st.tok[b] = first
+            st.pos[b] = frontend + len(r.tokens)
+            st.n_gen[b] = 1
+            st.buf[b, 0] = first
+            done_now = (r.max_new_tokens <= 1
+                        or (st.eos_id is not None and first == st.eos_id))
+            st.active[b] = not done_now
+            self._stream(it, [first], done_now)
+            if done_now:
+                self._retire(b)
+
+    def _decode_once(self) -> None:
+        """One decode chunk (compiled once per shape bucket), then stream
+        fresh tokens and retire slots that finished inside the chunk."""
+        st = self._live
+        chunk_fn = self._get_chunk(self.num_slots, st.max_gen, st.greedy,
+                                   st.eos_id, st.use_topp)
+        n_prev = st.n_gen.copy()
+        t0 = time.perf_counter()
+        out = chunk_fn(self.params, st.caches, st.page_table, st.astate,
+                       jnp.asarray(st.tok), jnp.asarray(st.pos),
+                       jnp.asarray(st.active), jnp.asarray(st.n_gen),
+                       jnp.asarray(st.limit), jnp.asarray(st.buf),
+                       jnp.asarray(st.keys), jnp.asarray(st.temps),
+                       jnp.asarray(st.topks), jnp.asarray(st.topps))
+        out = jax.block_until_ready(out)
+        (st.caches, st.page_table, st.astate, tok_d, pos_d, act_d, n_d,
+         buf_d, steps) = out
+        st.stats.decode_s += time.perf_counter() - t0
+        self._track_peak()
+        prev_total = int(st.n_gen.sum())
+        # writable host mirrors (np.asarray of a jax array is read-only)
+        st.tok = np.array(tok_d)
+        st.pos = np.array(pos_d)
+        act_new = np.array(act_d)
+        st.n_gen = np.array(n_d)
+        st.buf = np.array(buf_d)
+        st.stats.decode_steps += int(steps)
+        st.stats.decode_tokens += int(st.n_gen.sum()) - prev_total
+        was_active = st.active
+        st.active = act_new
+        for b in range(self.num_slots):
+            it = st.slot_item[b]
+            if it is None or not was_active[b]:
+                continue
+            finished = not act_new[b]
+            fresh = st.buf[b, n_prev[b]:st.n_gen[b]]
+            if len(fresh):
+                self._stream(it, fresh.tolist(), finished)
+            if finished:
+                self._retire(b)
+
+    # ------------------------------------------------------ loop drivers
+    def _start(self, *, temperature, key, eos_id, clock, greedy,
+               use_topp, max_gen) -> _SchedState:
         cfg = self.cfg
         if cfg.family == "audio":
             raise NotImplementedError(
                 "continuous batching covers decoder-only LMs; use "
                 "generate() for the enc-dec audio family")
+        if self._live is not None:
+            raise RuntimeError("engine already has a live serve()/run()")
         if eos_id == "engine-default":
             eos_id = self.eos_id
-        uids = [r.uid for r in requests]
-        if len(set(uids)) != len(uids):
-            raise ValueError("duplicate request uids")
-        frontend = cfg.frontend_tokens if cfg.frontend else 0
-        ps = self.page_size
-
-        def pages_ws(r: Request) -> int:
-            """Worst-case pages this request can ever hold: one per page of
-            rows [0, prompt_end + max_new - 1) — the last decode write
-            lands at position prompt_end + max_new - 2."""
-            rows = frontend + len(r.tokens) + r.max_new_tokens - 1
-            return kvp.num_pages(max(1, rows), ps)
-
-        for r in requests:
-            if r.max_new_tokens < 1:
-                raise ValueError(f"request {r.uid}: max_new_tokens < 1")
-            if frontend and r.frontend_embeds is None:
-                raise ValueError(
-                    f"request {r.uid}: {cfg.name} has a {cfg.frontend} "
-                    f"frontend; frontend_embeds is required")
-            need = frontend + len(r.tokens) + r.max_new_tokens
-            if need > self.max_len:
-                raise ValueError(
-                    f"request {r.uid} needs {need} positions > "
-                    f"max_len={self.max_len}")
-            if self._paged and pages_ws(r) > self.kv_pages:
-                raise ValueError(
-                    f"request {r.uid} needs {pages_ws(r)} KV pages > "
-                    f"pool size {self.kv_pages}")
-
         slots = self.num_slots
-        eff_temp = {r.uid: (temperature if r.temperature is None
-                            else r.temperature) for r in requests}
-        sampling = key is not None and any(t > 0.0 for t in eff_temp.values())
-        greedy = not sampling
-        base_key = key if key is not None else jax.random.PRNGKey(0)
-        max_gen = max((r.max_new_tokens for r in requests), default=1)
-        stats = ServeStats(page_size=ps, kv_pages_total=self.kv_pages)
-        queue: List[Request] = list(requests)
-        completions: Dict[int, Completion] = {}
-
         caches = transformer.init_caches(
             cfg, slots, self.max_len,
             kv_pages=self.kv_pages if self._paged else None)
         if self._paged:
             page_table = kvp.init_page_table(slots, self.max_pages_per_slot)
             astate = kvp.init_state(self.kv_pages)
-        else:                       # inert placeholders riding the carry
+        else:                   # inert placeholders riding the carry
             page_table = kvp.init_page_table(slots, 1)
             astate = kvp.init_state(1)
-        reserved = 0                            # host-side page accounting
-        slot_ws = [0] * slots
-        tok = np.zeros(slots, np.int32)
-        pos = np.zeros(slots, np.int32)
-        active = np.zeros(slots, bool)
-        n_gen = np.zeros(slots, np.int32)
-        limit = np.ones(slots, np.int32)
-        buf = np.zeros((slots, max_gen), np.int32)
-        keys = np.zeros((slots, 2), np.uint32)
-        temps = np.zeros(slots, np.float32)
-        topks = np.zeros(slots, np.int32)
-        topps = np.zeros(slots, np.float32)
-        slot_req: List[Optional[Request]] = [None] * slots
-        use_topp = sampling and any(0.0 < r.top_p < 1.0 for r in requests)
-        chunk_fn = self._get_chunk(slots, max_gen, greedy, eos_id, use_topp)
-        ragged_ok = self._ragged_batchable()
-        t_run0 = time.perf_counter()
+        t0 = time.perf_counter()
+        st = _SchedState(
+            stats=ServeStats(page_size=self.page_size,
+                             kv_pages_total=self.kv_pages),
+            clock=(clock if clock is not None
+                   else (lambda: time.perf_counter() - t0)),
+            eos_id=eos_id, greedy=greedy, use_topp=use_topp,
+            base_key=key if key is not None else jax.random.PRNGKey(0),
+            max_gen=max_gen,
+            caches=caches, page_table=page_table, astate=astate,
+            reserved=0, slot_ws=[0] * slots,
+            tok=np.zeros(slots, np.int32),
+            pos=np.zeros(slots, np.int32),
+            active=np.zeros(slots, bool),
+            n_gen=np.zeros(slots, np.int32),
+            limit=np.ones(slots, np.int32),
+            buf=np.zeros((slots, max(0, max_gen)), np.int32),
+            keys=np.zeros((slots, 2), np.uint32),
+            temps=np.zeros(slots, np.float32),
+            topks=np.zeros(slots, np.int32),
+            topps=np.zeros(slots, np.float32),
+            slot_item=[None] * slots, queue=[], results={},
+            seen_uids=set(), default_temp=temperature, t0_wall=t0)
+        self._live = st
+        return st
 
-        def retire(b: int):
-            nonlocal astate, page_table, reserved
-            r = slot_req[b]
-            toks = buf[b, :n_gen[b]].tolist()
-            reason = ("eos" if eos_id is not None and toks
-                      and toks[-1] == eos_id else "length")
-            completions[r.uid] = Completion(
-                uid=r.uid, tokens=toks, finish_reason=reason,
-                prompt_len=len(r.tokens))
-            slot_req[b] = None
-            active[b] = False
-            stats.completed += 1
-            if self._paged:
-                astate, page_table = self._free_slot(astate, page_table,
-                                                     jnp.int32(b))
-                reserved -= slot_ws[b]
-                slot_ws[b] = 0
+    def _iterate(self, schedule: Optional[ArrivalSchedule],
+                 on_iteration: Optional[Callable]) -> bool:
+        """One scheduling iteration: arrivals -> deadline shedding ->
+        pressure preemption -> batched admission -> one decode chunk
+        (streaming + retirement inside) -> the on_iteration hook (chaos
+        injection / invariant watchdog).  Returns True when a decode
+        chunk ran."""
+        st = self._live
+        now = st.clock()
+        if schedule is not None:
+            for r in schedule.due(now):
+                self.submit(r, now=now)
+        self._shed_expired(now)
+        self._pressure_preempt(now)
+        stalled_seen: set = set()
+        while True:
+            group = self._form_group(stalled_seen)
+            if not group:
+                break
+            self._admit(group)
+            if self.prefill_decode_ratio > 0 and st.active.any():
+                break           # overlap: hand control back to decode
+        self._track_peak()
+        stepped = False
+        if st.active.any():
+            self._decode_once()
+            stepped = True
+        st.iteration += 1
+        if on_iteration is not None:
+            on_iteration(self, st.iteration)
+        if hasattr(st.clock, "advance"):
+            st.clock.advance()
+        return stepped
 
-        def track_peak():
-            if self._paged:
-                used = self.kv_pages - int(jax.device_get(astate["top"]))
-                stats.kv_pages_peak = max(stats.kv_pages_peak, used)
+    def serve(self, schedule: ArrivalSchedule, *,
+              temperature: float = 0.0, key: Optional[jax.Array] = None,
+              eos_id: Any = "engine-default",
+              clock: Optional[Callable[[], float]] = None,
+              on_iteration: Optional[Callable] = None,
+              _greedy: Optional[bool] = None,
+              _use_topp: Optional[bool] = None,
+              _max_gen: int = 0) -> List[Completion]:
+        """Long-lived serving loop over an ``ArrivalSchedule``.
 
-        def form_group(stalled_seen: set) -> List[Request]:
-            """Scan the queue IN ORDER for the next admission group: up to
-            prefill_batch requests that have a free slot and (paged) a
-            worst-case page reservation.  A request that does not fit the
-            page pool is counted as a stall (once per scheduling iteration
-            — `stalled_seen` dedups across the admission loop's passes)
-            and SKIPPED — it must not head-of-line-block later rows that
-            do fit; it is retried every iteration and admits once retiring
-            slots release their reservations.  Non-ragged-batchable stacks
-            (rec/ssd states, SWA rings) group equal-length rows only (no
-            right-padding).  With overlap enabled and decodes in flight,
-            the group is bounded by the prefill token budget (always >= 1
-            request, so admission cannot starve)."""
-            free = sum(1 for s in slot_req if s is None)
-            if not free or not queue:
-                return []
-            budget = None
-            if self.prefill_decode_ratio > 0 and active.any():
-                budget = max(1, int(self.prefill_decode_ratio
-                                    * self.decode_chunk
-                                    * int(active.sum())))
-            group: List[Request] = []
-            picked: List[int] = []
-            group_ws = group_tokens = 0
-            for qi, r in enumerate(queue):
-                if len(group) == min(free, self.prefill_batch):
-                    break
-                if (budget is not None and group
-                        and group_tokens + len(r.tokens) > budget):
-                    break
-                if (not ragged_ok and group
-                        and len(r.tokens) != len(group[0].tokens)):
-                    continue
-                if (self._paged
-                        and pages_ws(r) > self.kv_pages - reserved
-                        - group_ws):
-                    if r.uid not in stalled_seen:
-                        stalled_seen.add(r.uid)
-                        stats.admission_stalls += 1
-                    continue
-                group.append(r)
-                picked.append(qi)
-                group_ws += pages_ws(r) if self._paged else 0
-                group_tokens += len(r.tokens)
-            for qi in reversed(picked):
-                del queue[qi]
-            return group
+        Requests arrive mid-run per the schedule (plus any submit() from
+        callbacks); the loop runs until the schedule is exhausted and
+        every submitted request reached a terminal state (completed,
+        rejected, cancelled, or shed).  Completions return in submission
+        order; the wall-clock split is left in ``self.last_stats``.
 
-        def admit(group: List[Request]):
-            """ONE batched prefill + ONE jit scatter (and, paged, ONE page
-            allocation) admits the whole group — the serial engine paid a
-            host round-trip per request."""
-            nonlocal caches, page_table, astate, reserved
-            t0 = time.perf_counter()
-            rows, logits, bpb = self._prefill_group(group)
-            slot_vec = np.full(bpb, -1, np.int32)   # -1 rows: dummies, drop
-            assigned: List[int] = []
-            for i, r in enumerate(group):
-                b = next(j for j, s in enumerate(slot_req) if s is None)
-                slot_req[b] = r
-                assigned.append(b)
-                slot_vec[i] = b
-            if self._paged:
-                npages = np.zeros(bpb, np.int32)
-                for i, r in enumerate(group):
-                    reserved += pages_ws(r)
-                    slot_ws[assigned[i]] = pages_ws(r)
-                    npages[i] = kvp.num_pages(frontend + len(r.tokens), ps)
-                astate, page_table = self._alloc_rows(
-                    astate, page_table, jnp.asarray(slot_vec),
-                    jnp.asarray(npages))
-                caches = self._write_rows(caches, rows,
-                                          jnp.asarray(slot_vec), page_table)
-            else:
-                caches = self._write_rows(caches, rows,
-                                          jnp.asarray(slot_vec))
-            logits = jax.block_until_ready(logits)
-            jax.block_until_ready(caches)
-            now = time.perf_counter()
-            stats.prefill_s += now - t0
-            ttft = now - t_run0
-            stats.ttft_s_sum += ttft * len(group)
-            stats.ttft_s_max = max(stats.ttft_s_max, ttft)
-            stats.prefill_batches += 1
-            stats.prefill_tokens += sum(len(r.tokens) for r in group)
-            stats.admitted += len(group)
-            for i, r in enumerate(group):
-                b = assigned[i]
-                lg = np.asarray(logits[i, -1], np.float32)
-                skey = jax.random.fold_in(base_key, r.uid)
-                t_r = eff_temp[r.uid]
-                if greedy or t_r <= 0.0:
-                    first = int(lg.argmax())
-                else:
-                    scaled = lg / max(t_r, 1e-6)
-                    if r.top_k > 0:
-                        thr = np.sort(scaled)[::-1][
-                            min(r.top_k, scaled.size) - 1]
-                        scaled = np.where(scaled < thr, -np.inf, scaled)
-                    if 0.0 < r.top_p < 1.0:
-                        srt = np.sort(lg / max(t_r, 1e-6))[::-1]
-                        e = np.exp(srt - srt[0])
-                        probs = e / e.sum()
-                        cum = np.cumsum(probs)
-                        kcnt = max(1, int(((cum - probs)
-                                           < r.top_p).sum()))
-                        scaled = np.where(scaled < srt[kcnt - 1],
-                                          -np.inf, scaled)
-                    first = int(jax.random.categorical(
-                        jax.random.fold_in(skey, 0), jnp.asarray(scaled)))
-                keys[b] = np.asarray(skey, np.uint32)
-                temps[b] = t_r
-                topks[b] = r.top_k
-                topps[b] = r.top_p
-                tok[b] = first
-                pos[b] = frontend + len(r.tokens)
-                n_gen[b] = 1
-                limit[b] = r.max_new_tokens
-                buf[b] = 0
-                buf[b, 0] = first
-                done_now = (r.max_new_tokens <= 1
-                            or (eos_id is not None and first == eos_id))
-                active[b] = not done_now
-                if done_now:
-                    retire(b)
-
-        while queue or any(s is not None for s in slot_req):
-            # -------- admission: batched-prefill groups, interleaved with
-            # decode chunks under the overlap budget instead of pausing
-            # decode until every free slot is filled
-            stalled_seen: set = set()
+        ``clock`` reads serve time in seconds (default: wall clock since
+        serve start; pass a ManualClock for deterministic tests —
+        arrivals and deadlines then advance per scheduling iteration).
+        ``on_iteration(engine, i)`` fires after every scheduling
+        iteration — the chaos-injection / invariant-watchdog hook.  The
+        underscore knobs let run() pin the compiled-chunk bucket exactly
+        as the PR 5 burst scheduler did."""
+        greedy = (key is None) if _greedy is None else _greedy
+        st = self._start(temperature=temperature, key=key, eos_id=eos_id,
+                         clock=clock, greedy=greedy,
+                         use_topp=bool(_use_topp), max_gen=_max_gen)
+        try:
             while True:
-                group = form_group(stalled_seen)
-                if not group:
+                stepped = self._iterate(schedule, on_iteration)
+                idle = (not stepped and not st.queue
+                        and not st.active.any())
+                if (schedule.exhausted and idle
+                        and all(s is None for s in st.slot_item)):
                     break
-                admit(group)
-                if self.prefill_decode_ratio > 0 and active.any():
-                    break       # overlap: hand control back to decode
-            track_peak()
-            if not active.any():
-                continue            # all admitted work finished; drain queue
-            # -------- one decode chunk (compiled once per shape)
-            t0 = time.perf_counter()
-            out = chunk_fn(self.params, caches, page_table, astate,
-                           jnp.asarray(tok), jnp.asarray(pos),
-                           jnp.asarray(active), jnp.asarray(n_gen),
-                           jnp.asarray(limit), jnp.asarray(buf),
-                           jnp.asarray(keys), jnp.asarray(temps),
-                           jnp.asarray(topks), jnp.asarray(topps))
-            out = jax.block_until_ready(out)
-            (caches, page_table, astate, tok_d, pos_d, act_d, n_d, buf_d,
-             steps) = out
-            stats.decode_s += time.perf_counter() - t0
-            track_peak()
-            prev_total = int(n_gen.sum())
-            # writable host mirrors (np.asarray of a jax array is read-only)
-            tok = np.array(tok_d)
-            pos = np.array(pos_d)
-            act_new = np.array(act_d)
-            n_gen = np.array(n_d)
-            buf = np.array(buf_d)
-            stats.decode_steps += int(steps)
-            stats.decode_tokens += int(n_gen.sum()) - prev_total
-            # -------- retire slots that finished inside the chunk
-            for b in range(slots):
-                if slot_req[b] is not None and active[b] and not act_new[b]:
-                    active[b] = False
-                    retire(b)
-            active = act_new
+                if idle and not schedule.exhausted:
+                    nxt = schedule.next_time()
+                    wait = (nxt - st.clock()) if nxt is not None else 0.0
+                    if wait > 0 and not hasattr(st.clock, "advance"):
+                        time.sleep(min(wait, 0.05))
+        finally:
+            self.last_stats = st.stats
+            self._live = None
+        return [st.results[i] for i in range(st.order)]
 
-        self.last_stats = stats
-        return [completions[r.uid] for r in requests]
+    def run(self, requests: Sequence[Request], *, temperature: float = 0.0,
+            key: Optional[jax.Array] = None,
+            eos_id: Any = "engine-default",
+            on_iteration: Optional[Callable] = None) -> List[Completion]:
+        """Serve a burst of `requests` (any count vs. `num_slots`) to
+        completion — the one-shot API, now a burst-schedule wrapper over
+        the long-lived loop (same admission order, chunking, and greedy
+        outputs as the PR 5 scheduler).  Invalid requests (oversized,
+        duplicate uid, missing frontend) finish as rejected Completions
+        instead of raising.  Returns completions in request order;
+        wall-clock split is left in `self.last_stats`."""
+        eff = [(temperature if r.temperature is None else r.temperature)
+               for r in requests]
+        sampling = key is not None and any(t > 0.0 for t in eff)
+        use_topp = sampling and any(0.0 < r.top_p < 1.0 for r in requests)
+        max_gen = max([r.max_new_tokens for r in requests] + [1])
+        return self.serve(ArrivalSchedule.burst(requests),
+                          temperature=temperature, key=key, eos_id=eos_id,
+                          on_iteration=on_iteration, _greedy=not sampling,
+                          _use_topp=use_topp, _max_gen=max_gen)
 
     # ------------------------------------------------------------- legacy
     def generate(self, batch: Dict[str, jax.Array], steps: int,

@@ -57,9 +57,18 @@ def view_len(max_len: int, page_size: int) -> int:
 # ------------------------------------------------------------- allocator
 def init_state(total_pages: int) -> AllocState:
     """Fresh allocator: all pages free.  ``free[0:top]`` hold the free ids
-    (a stack; alloc pops from ``free[top-1]``, free pushes back)."""
+    (a stack; alloc pops from ``free[top-1]``, free pushes back).
+
+    ``refs`` is a per-page reference count: alloc sets it to 1, ``add_ref``
+    bumps it for sharing (prefix caching / copy-on-write pages map the
+    same physical page into several page tables), and ``free_slot_pages``
+    decrements — a page returns to the free stack only when its count
+    hits zero.  The serving invariant the chaos watchdog asserts is
+    conservation: ``top + count(refs > 0) == total_pages`` after every
+    scheduling iteration."""
     return {"free": jnp.arange(total_pages, dtype=jnp.int32),
-            "top": jnp.asarray(total_pages, jnp.int32)}
+            "top": jnp.asarray(total_pages, jnp.int32),
+            "refs": jnp.zeros(total_pages, jnp.int32)}
 
 
 def init_page_table(num_slots: int, max_pages: int) -> jax.Array:
@@ -81,7 +90,9 @@ def alloc_masked(state: AllocState, want: jax.Array
     ok = want & (idx >= 0)
     pid = jnp.where(ok, free[jnp.clip(idx, 0, p - 1)], jnp.int32(-1))
     new_top = top - jnp.sum(ok.astype(jnp.int32))
-    return {"free": free, "top": new_top}, pid, ok
+    dest = jnp.where(ok, pid, jnp.int32(p)).reshape(-1)   # OOB -> drop
+    refs = state["refs"].at[dest].set(1, mode="drop")
+    return {"free": free, "top": new_top, "refs": refs}, pid, ok
 
 
 def alloc_slot_pages(state: AllocState, page_table: jax.Array,
@@ -115,19 +126,37 @@ def alloc_rows_pages(state: AllocState, page_table: jax.Array,
 
 def free_slot_pages(state: AllocState, page_table: jax.Array,
                     slot: jax.Array) -> Tuple[AllocState, jax.Array]:
-    """Push all of ``slot``'s allocated pages back on the free stack and
-    clear its page-table row."""
-    free, top = state["free"], state["top"]
+    """Drop one reference on each of ``slot``'s allocated pages, push the
+    pages whose count hits zero back on the free stack, and clear the
+    slot's page-table row.  This is the engine's retire AND preemption
+    path: with no sharing every page's count is 1, so this reclaims the
+    whole row; once prefix-cached pages are shared (``add_ref``) the
+    shared pages survive until their last mapping drops."""
+    free, top, refs = state["free"], state["top"], state["refs"]
     p = free.shape[0]
     row = page_table[slot]                                # (MP,)
     valid = row >= 0
-    v = valid.astype(jnp.int32)
+    rdest = jnp.where(valid, row, jnp.int32(p))
+    refs = refs.at[rdest].add(-1, mode="drop")
+    reclaim = valid & (refs[jnp.clip(row, 0, p - 1)] <= 0)
+    v = reclaim.astype(jnp.int32)
     rank = jnp.cumsum(v) - v
-    dest = jnp.where(valid, top + rank, jnp.int32(p))     # p -> dropped
+    dest = jnp.where(reclaim, top + rank, jnp.int32(p))   # p -> dropped
     free = free.at[dest].set(row, mode="drop")
     top = top + jnp.sum(v)
-    return ({"free": free, "top": top},
+    refs = refs.at[rdest].max(0, mode="drop")             # clamp at zero
+    return ({"free": free, "top": top, "refs": refs},
             page_table.at[slot].set(jnp.int32(-1)))
+
+
+def add_ref(state: AllocState, pages: jax.Array) -> AllocState:
+    """Bump the reference count of ``pages`` (any shape int32; -1 entries
+    ignored).  The hook future prefix-caching uses to map one physical
+    page into several slots' tables; today only tests exercise it."""
+    p = state["free"].shape[0]
+    dest = jnp.where(pages >= 0, pages, jnp.int32(p)).reshape(-1)
+    return {"free": state["free"], "top": state["top"],
+            "refs": state["refs"].at[dest].add(1, mode="drop")}
 
 
 def pages_in_use(state: AllocState) -> jax.Array:

@@ -197,8 +197,10 @@ def test_request_larger_than_pool_rejected():
     cfg = _tiny_cfg().with_spt(kv_layout="paged")
     eng = Engine(cfg, _params(_tiny_cfg()), max_len=MAX_LEN,
                  num_slots=SLOTS, decode_chunk=CHUNK, kv_pages=1)
-    with pytest.raises(ValueError, match="KV pages"):
-        eng.run(_reqs(_tiny_cfg(), [32]))
+    out = eng.run(_reqs(_tiny_cfg(), [32]))
+    assert out[0].finish_reason == "rejected"
+    assert "KV pages" in out[0].detail
+    assert eng.last_stats.rejections == 1
 
 
 def test_lazy_page_growth_across_boundary():

@@ -136,10 +136,15 @@ def test_generate_legacy_api_matches_old_loop(tiny):
 
 
 def test_duplicate_request_uids_rejected(tiny):
+    """Failure isolation: the duplicate uid is rejected as a Completion,
+    the first occurrence (and the rest of the batch) still serves."""
     _, _, eng = tiny
-    with pytest.raises(ValueError, match="duplicate"):
-        eng.run([Request(uid=0, tokens=[1, 2], max_new_tokens=2),
-                 Request(uid=0, tokens=[3, 4], max_new_tokens=2)])
+    out = eng.run([Request(uid=0, tokens=[1, 2], max_new_tokens=2),
+                   Request(uid=0, tokens=[3, 4], max_new_tokens=2)])
+    assert out[0].finish_reason in ("eos", "length") and out[0].tokens
+    assert out[1].finish_reason == "rejected" and not out[1].tokens
+    assert "duplicate" in out[1].detail
+    assert eng.last_stats.rejections == 1
 
 
 def test_bucketed_padding_is_output_invariant():
