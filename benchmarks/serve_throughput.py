@@ -63,9 +63,13 @@ def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
           decode_chunk: int, ragged: bool, variant: str = "sparse",
           max_len: int = 0, kv_layout: str = "contiguous",
           page_size: int = 128, kv_pages=None, prefill_batch=None,
-          prefill_decode_ratio: float = 0.0, trials: int = 1) -> dict:
+          prefill_decode_ratio: float = 0.0, trials: int = 1,
+          telemetry: str = "off", trace_out=None) -> dict:
     cfg = _variant_cfg(configs.get_smoke(arch), variant)
-    cfg = cfg.with_spt(kv_layout=kv_layout, kv_page_size=page_size)
+    if trace_out:
+        telemetry = "trace"
+    cfg = cfg.with_spt(kv_layout=kv_layout, kv_page_size=page_size,
+                       telemetry=telemetry)
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     max_len = max_len or prompt_len + gen + 8
     engine = Engine(cfg, params, max_len=max_len,
@@ -115,6 +119,13 @@ def bench(arch: str, requests: int, slots: int, prompt_len: int, gen: int,
         })
     else:
         row["kv_bytes"] = slots * max_len * row_b
+    if telemetry != "off":
+        row["telemetry"] = telemetry
+        row.update(engine.last_recorder.device_aggregates())
+    if trace_out:
+        from repro.serving import trace_export
+        trace_export.write_trace(engine.last_recorder, trace_out)
+        row["trace_out"] = trace_out
     return row
 
 
@@ -184,6 +195,10 @@ def prefill_overlap_report(args) -> dict:
         "batched": dict(prefill_batch=args.slots),
         "overlapped": dict(prefill_batch=args.slots,
                            prefill_decode_ratio=args.prefill_decode_ratio),
+        # batched admission with jit-pure device counters threaded
+        # through the compiled chunk — the telemetry overhead row
+        # (check_bench floors its decode tokens/s against 'batched')
+        "telemetry": dict(prefill_batch=args.slots, telemetry="counters"),
     }
     rows = {name: bench(args.arch, **kw, **mk) for name, mk in modes.items()}
     serial = rows["serial"]
@@ -202,6 +217,9 @@ def prefill_overlap_report(args) -> dict:
             name: round(r["decode_tok_s"]
                         / max(serial["decode_tok_s"], 1e-9), 2)
             for name, r in rows.items() if name != "serial"},
+        "telemetry_decode_tok_s_ratio": round(
+            rows["telemetry"]["decode_tok_s"]
+            / max(rows["batched"]["decode_tok_s"], 1e-9), 3),
     }
     with open("BENCH_serve.json", "w") as f:
         json.dump(report, f, indent=1)
@@ -222,7 +240,10 @@ def load_sweep_report(args) -> dict:
     from repro.serving.engine import ArrivalSchedule
 
     cfg = _variant_cfg(configs.get_smoke(args.arch), "sparse")
-    cfg = cfg.with_spt(kv_layout="paged", kv_page_size=args.page_size)
+    # counters mode so every sweep row carries the device-side sparsity /
+    # expert-balance aggregates next to its latency percentiles
+    cfg = cfg.with_spt(kv_layout="paged", kv_page_size=args.page_size,
+                       telemetry="counters")
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     # background requests generate 4x longer than interactive ones so
     # they actually HOLD their pages across many scheduling iterations —
@@ -249,6 +270,7 @@ def load_sweep_report(args) -> dict:
     def stats_row(eng, out, wall, mode, qps):
         s = eng.last_stats
         d = s.as_dict()
+        agg = eng.last_recorder.device_aggregates()
         return {
             "mode": mode, "offered_qps": qps,
             "requests": len(out), "completed": s.completed,
@@ -258,6 +280,8 @@ def load_sweep_report(args) -> dict:
             "tpot_p50_s": d["tpot_p50_s"], "tpot_p99_s": d["tpot_p99_s"],
             "preemptions": s.preemptions, "shed": s.shed,
             "admission_stalls": s.admission_stalls,
+            "keep_rate": agg.get("keep_rate", 1.0),
+            "expert_load_imbalance": agg.get("expert_load_imbalance", 1.0),
         }
 
     rows = []
@@ -357,6 +381,10 @@ def main():
     ap.add_argument("--qps-sweep", default="2,6,18",
                     help="comma list of offered arrival rates for "
                          "--load-sweep")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace.json of "
+                         "the first plain-variant bench run here (forces "
+                         "telemetry=trace for that run)")
     args = ap.parse_args()
 
     if args.load_sweep:
@@ -367,6 +395,7 @@ def main():
         return
 
     print(json.dumps({"note": scale_note()}))
+    trace_pending = args.trace_out
     for variant in args.variants.split(","):
         if variant.strip() == "prefill-overlap":
             print(json.dumps(prefill_overlap_report(args), indent=1))
@@ -376,7 +405,8 @@ def main():
                         args.prompt_len, args.gen, args.decode_chunk,
                         ragged, variant=variant.strip(),
                         kv_layout=args.kv_layout, page_size=args.page_size,
-                        kv_pages=args.kv_pages)
+                        kv_pages=args.kv_pages, trace_out=trace_pending)
+            trace_pending = None       # first row only
             print(json.dumps(row))
 
 

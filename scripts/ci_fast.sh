@@ -40,6 +40,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # after every scheduling iteration (exit 1 on any violation or lost
 # request).  Shorter than the pytest matrix soaks but on top of them:
 # this is the exact command a builder can re-run standalone to bisect a
-# scheduler leak.
+# scheduler leak.  --trace-out doubles as the telemetry smoke: the soak
+# runs with telemetry=trace, validates the written Chrome trace against
+# the schema, and fails if any submitted uid is missing a request lane.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m repro.serving.chaos --requests 16 --seed 0
+    python -m repro.serving.chaos --requests 16 --seed 0 \
+    --trace-out "$(mktemp -t chaos_trace.XXXXXX.json)"

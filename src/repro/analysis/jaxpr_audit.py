@@ -370,6 +370,45 @@ def _audit_decode_chunk_disabled() -> List[Violation]:
             + forbidden_primitive_violations(jaxpr, entry))
 
 
+@hot_entrypoint("engine.decode_chunk_telemetry")
+def _audit_decode_chunk_telemetry() -> List[Violation]:
+    """telemetry="off" must be zero-cost: the compiled decode chunk's
+    jaxpr is eqn-for-eqn identical to a build that never heard of
+    telemetry (the default config), with the legacy 9-output carry.
+    telemetry="counters" must actually thread the counter tree (more
+    eqns, more outputs) — a silent no-op counter path would report
+    zeros as real keep rates."""
+    entry = "engine.decode_chunk[telemetry]"
+    base = _tiny_lm_cfg()
+    jaxpr_default, _, _, _ = _engine_chunk_jaxpr(base)
+    jaxpr_off, _, _, _ = _engine_chunk_jaxpr(base.with_spt(telemetry="off"))
+    jaxpr_ctr, _, _, _ = _engine_chunk_jaxpr(
+        base.with_spt(telemetry="counters"))
+    out: List[Violation] = []
+    n_default = sum(1 for _ in iter_eqns(jaxpr_default))
+    n_off = sum(1 for _ in iter_eqns(jaxpr_off))
+    n_ctr = sum(1 for _ in iter_eqns(jaxpr_ctr))
+    if n_off != n_default:
+        out.append(Violation(
+            "jaxpr.telemetry-cost", entry,
+            f"telemetry=off chunk has {n_off} eqns vs {n_default} for the "
+            "default config — the off path must be zero-cost"))
+    n_out_default = len(jaxpr_default.jaxpr.outvars)   # flattened leaves
+    n_out_off = len(jaxpr_off.jaxpr.outvars)
+    if n_out_off != n_out_default:
+        out.append(Violation(
+            "jaxpr.telemetry-cost", entry,
+            f"telemetry=off chunk returns {n_out_off} output leaves vs "
+            f"{n_out_default} for the default config — the off carry "
+            "must match the legacy 9-tuple"))
+    if n_ctr <= n_off or len(jaxpr_ctr.jaxpr.outvars) <= n_out_off:
+        out.append(Violation(
+            "jaxpr.telemetry-cost", entry,
+            "telemetry=counters chunk is indistinguishable from off — "
+            "the counter tree is not riding the carry"))
+    return out
+
+
 @hot_entrypoint("engine.prefill_ragged")
 def _audit_prefill_ragged() -> List[Violation]:
     """Batched ragged prefill: admission-path trace must stay free of

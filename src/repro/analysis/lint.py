@@ -11,12 +11,15 @@ traced artifact:
                          masks broadcast+reshape (core/ keeps its
                          documented jnp fallback oracles, which ARE the
                          gather formulation the kernels replace).
-  lint.host-sync         hot modules (models/, kernels/, core/) must not
-                         call ``.item()`` or ``np.asarray`` — either one
-                         is a device sync inside code that the serving
-                         loop jits (the engine's host *scheduler* in
-                         serving/engine.py syncs at chunk boundaries by
-                         design and is exempt).
+  lint.host-sync         hot modules (models/, kernels/, core/, and
+                         serving/ — the telemetry layer included) must
+                         not call ``.item()`` or ``np.asarray`` — either
+                         one is a device sync inside code that the
+                         serving loop jits (the engine's host *scheduler*
+                         in serving/engine.py syncs at chunk boundaries
+                         by design and is exempt; telemetry.py /
+                         trace_export.py are NOT, so observability can
+                         never add a sync to the hot path).
   lint.interpret-default kernels/: every function with a defaulted
                          ``interpret`` parameter must default to None
                          ("derive from backend", kernels.resolve_interpret)
@@ -174,7 +177,8 @@ def _check_paged_gather(rel: str, tree: ast.AST) -> List[Violation]:
 RULES: List[Tuple[str, Callable[[str], bool],
                   Callable[[str, ast.AST], List[Violation]]]] = [
     ("lint.jnp-repeat", _in("models", "serving"), _check_jnp_repeat),
-    ("lint.host-sync", _in("models", "kernels", "core"), _check_host_sync),
+    ("lint.host-sync", _in("models", "kernels", "core", "serving"),
+     _check_host_sync),
     ("lint.interpret-default", _in("kernels"), _check_interpret_default),
     ("lint.dispatch-routing", _in("models", "serving"),
      _check_dispatch_routing),

@@ -72,6 +72,15 @@ class SPTConfig:
     routed_ffn_in_experts: bool = False  # sub-route inside MoE experts
     lb_loss_weight: float = 0.01
     qerr_loss_weight: float = 0.0
+    # serving observability (serving/telemetry.py): "off" = zero-cost (the
+    # compiled decode chunk is eqn-identical to a telemetry-free build),
+    # "counters" = jit-pure device counters (sparse-MHA kept/eligible
+    # slots, routed-FFN/MoE expert loads and drops, in-loop page allocs)
+    # threaded through the chunk carry and drained once per scheduling
+    # iteration, "trace" = counters + host-side request lifecycle events
+    # and scheduler spans (Chrome-trace/Perfetto export).  Outputs are
+    # bit-identical across all three modes.
+    telemetry: str = "off"          # off | counters | trace
 
     def disabled(self) -> "SPTConfig":
         return dataclasses.replace(self, sparse_mha=False, routed_ffn=False)

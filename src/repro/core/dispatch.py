@@ -246,6 +246,31 @@ def use_paged_kv(cfg) -> bool:
     return getattr(cfg.spt, "kv_layout", "contiguous") == "paged"
 
 
+def telemetry_mode(cfg) -> str:
+    """Serving-observability level: "off" | "counters" | "trace".
+
+    cfg is a ModelConfig (duck-typed).  Like the KV-layout switch this is
+    a pure config decision — no kernel is involved, so the
+    REPRO_DISABLE_KERNELS kill switch does not apply.  "counters" threads
+    jit-pure device counters through the compiled decode chunk / batched
+    prefill; "trace" additionally records host-side request lifecycle
+    events and scheduler spans (serving/telemetry.py).
+    """
+    return getattr(cfg.spt, "telemetry", "off")
+
+
+def use_telemetry_counters(cfg) -> bool:
+    """Should the model layers emit jit-pure telemetry counters (tel_*
+    aux entries: sparse-MHA kept/eligible slots, routed-FFN/MoE expert
+    loads and capacity drops)?
+
+    Off by default so the decode-chunk jaxpr stays eqn-identical to a
+    telemetry-free build (jaxpr.telemetry-cost audit); both "counters"
+    and "trace" turn the device counters on.
+    """
+    return telemetry_mode(cfg) in ("counters", "trace")
+
+
 def load_balance_loss(router_probs: jax.Array, choice: jax.Array,
                       num_groups: int) -> jax.Array:
     """Switch-style auxiliary loss (paper §4.2 'load-balancing loss'):

@@ -123,14 +123,30 @@ def main() -> int:
                          "tokens per scheduling iteration instead of "
                          "pausing decode until every free slot is filled "
                          "(0 = fill all free slots before each chunk)")
+    ap.add_argument("--telemetry", default="off",
+                    choices=("off", "counters", "trace"),
+                    help="serving observability: 'counters' threads "
+                         "jit-pure sparsity/expert/page counters through "
+                         "the compiled chunk (drained once per scheduling "
+                         "iteration); 'trace' adds per-request lifecycle "
+                         "timelines and scheduler spans; outputs are "
+                         "bit-identical across all three")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace.json of "
+                         "the timed run here (implies --telemetry trace)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot (counters/"
+                         "gauges/histograms) as JSON here")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get_config(args.arch)
+    telemetry = "trace" if args.trace_out else args.telemetry
     cfg = cfg.with_spt(decode_attn_impl=args.decode_impl,
                        decode_ffn_impl=args.decode_ffn_impl,
                        kv_layout=args.kv_layout,
-                       kv_page_size=args.page_size)
+                       kv_page_size=args.page_size,
+                       telemetry=telemetry)
     if args.ffn_impl is not None:
         cfg = cfg.with_spt(ffn_impl=args.ffn_impl)
     dp, tp = (int(x) for x in args.mesh.split("x"))
@@ -180,7 +196,7 @@ def main() -> int:
             result = engine.run(reqs, temperature=args.temperature, key=key)
         wall_s = time.perf_counter() - t0
         stats = engine.last_stats
-    print(json.dumps({
+    out = {
         "arch": cfg.name,
         "requests": args.requests, "slots": args.slots,
         "generated_tokens": sum(len(c.tokens) for c in result),
@@ -189,7 +205,18 @@ def main() -> int:
         **stats.as_dict(),
         "finish_reasons": sorted({c.finish_reason for c in result}),
         "sample": result[0].tokens[:8],
-    }, indent=1))
+    }
+    if args.trace_out:
+        from repro.serving import trace_export
+        trace = trace_export.write_trace(engine.last_recorder,
+                                         args.trace_out)
+        out["trace_out"] = args.trace_out
+        out["trace_events"] = len(trace["traceEvents"])
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(stats.snapshot().as_dict(), f, indent=1)
+        out["metrics_out"] = args.metrics_out
+    print(json.dumps(out, indent=1))
     return 0
 
 

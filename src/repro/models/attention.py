@@ -250,6 +250,19 @@ def attend(p: dict, cfg: ModelConfig, q: jax.Array, k: jax.Array,
     return out, aux
 
 
+def _tel_decode_counters(cfg: ModelConfig, valid: jax.Array) -> dict:
+    """Jit-pure sparsity counters for one decode step (telemetry layer).
+
+    Derived from the validity mask alone — the decode paths select
+    top-L = top_l(mask_width) slots out of the valid ones, so per row
+    kept = min(L, n_valid) and eligible = n_valid.  No scores are
+    recomputed; cost is one mask reduction per attention layer."""
+    n_valid = valid.sum(axis=-1).astype(jnp.float32)          # (B,)
+    l = sa.top_l(valid.shape[-1], _sa_config(cfg), None)
+    return {"tel_attn_kept": jnp.minimum(float(l), n_valid),
+            "tel_attn_elig": n_valid}
+
+
 def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                mode: str = "train", causal: bool = True,
                window: Optional[int] = None,
@@ -315,6 +328,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
         scale = hd ** -0.5
         sparse = sparse_applicable(cfg)
         engine_valid = kv_valid is not None and kv_valid.shape[-1] == s_view
+        if sparse and engine_valid and kdispatch.use_telemetry_counters(cfg):
+            aux.update(_tel_decode_counters(cfg, kv_valid))
         native = (engine_valid and kdispatch.use_paged_native_decode(cfg)
                   and (not sparse or kdispatch.use_sparse_decode_kernel(cfg)))
         if native:
@@ -342,6 +357,8 @@ def attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
             valid = kv_valid_mask(new_cache, start, window)   # (B, S_cache)
         scale = hd ** -0.5
         if sparse_applicable(cfg):
+            if kdispatch.use_telemetry_counters(cfg):
+                aux.update(_tel_decode_counters(cfg, valid))
             if kdispatch.use_sparse_decode_kernel(cfg):
                 from repro.kernels.sparse_attention import ops as sa_ops
                 out = sa_ops.sparse_mha_decode(

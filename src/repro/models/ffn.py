@@ -57,39 +57,70 @@ def ffn_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
+def _tel_expert_load(choice: jax.Array, num_groups: int, x: jax.Array,
+                     seq_lengths) -> jax.Array:
+    """(B, G) per-row token->expert load from the router's top-k choices
+    (telemetry layer).  Right-pad rows of a ragged prefill batch are
+    masked out so loads count real tokens only."""
+    oh = jax.nn.one_hot(choice, num_groups, dtype=jnp.float32)  # (B,S,k,G)
+    if seq_lengths is not None:
+        valid = (jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+                 < seq_lengths[:, None]).astype(jnp.float32)    # (B, S)
+        oh = oh * valid[:, :, None, None]
+    return oh.sum(axis=(1, 2))
+
+
 def _routed_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str,
                   seq_lengths=None) -> Tuple[jax.Array, dict]:
     lc = cfg.spt.lora
     rcfg = _routed_cfg(cfg)
     need_aux = mode == "train"
+    y = aux = None
     if mode == "decode" and x.ndim == 3 and x.shape[1] == 1:
         if dispatch.use_decode_ffn_kernel(cfg):
             from repro.kernels.routed_ffn import ops as rffn_ops
-            return rffn_ops.routed_ffn_decode(x, p, rcfg, lc)
-        if cfg.spt.decode_ffn_impl == "jnp":
+            y, aux = rffn_ops.routed_ffn_decode(x, p, rcfg, lc)
+        elif cfg.spt.decode_ffn_impl == "jnp":
             # explicit per-path override: grouped jnp at decode even when
             # ffn_impl="pallas" keeps the train/prefill kernel on
-            return routed_ffn.routed_ffn(x, p, rcfg, lc, impl="grouped",
-                                         need_aux=False)
-    impl = cfg.spt.ffn_impl
-    if impl == "pallas":
-        if dispatch.use_routed_ffn_kernel(cfg):
-            from repro.kernels.routed_ffn import ops as rffn_ops
-            return rffn_ops.routed_ffn(x, p, rcfg, lc, need_aux=need_aux,
-                                       seq_lengths=seq_lengths)
-        impl = "grouped"                       # REPRO_DISABLE_KERNELS=1
-    if impl == "grouped_shmap":
-        from repro.core import ffn_shmap
-        from repro.sharding import current_rules
-        rules = current_rules() or {}
-        mesh = rules.get("__mesh__")
-        if (x.ndim == 3 and seq_lengths is None and ffn_shmap.applicable(
-                mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0])):
-            return ffn_shmap.routed_ffn_shmap(x, p, rcfg, lc, mesh,
-                                              need_aux=need_aux)
-        impl = "grouped"
-    return routed_ffn.routed_ffn(x, p, rcfg, lc, impl=impl,
-                                 need_aux=need_aux, seq_lengths=seq_lengths)
+            y, aux = routed_ffn.routed_ffn(x, p, rcfg, lc, impl="grouped",
+                                           need_aux=False)
+    if y is None:
+        impl = cfg.spt.ffn_impl
+        if impl == "pallas":
+            if dispatch.use_routed_ffn_kernel(cfg):
+                from repro.kernels.routed_ffn import ops as rffn_ops
+                y, aux = rffn_ops.routed_ffn(x, p, rcfg, lc,
+                                             need_aux=need_aux,
+                                             seq_lengths=seq_lengths)
+            else:
+                impl = "grouped"               # REPRO_DISABLE_KERNELS=1
+        if y is None and impl == "grouped_shmap":
+            from repro.core import ffn_shmap
+            from repro.sharding import current_rules
+            rules = current_rules() or {}
+            mesh = rules.get("__mesh__")
+            if (x.ndim == 3 and seq_lengths is None and ffn_shmap.applicable(
+                    mesh, rcfg, cfg.d_ff, x.shape[1], x.shape[0])):
+                y, aux = ffn_shmap.routed_ffn_shmap(x, p, rcfg, lc, mesh,
+                                                    need_aux=need_aux)
+            else:
+                impl = "grouped"
+        if y is None:
+            y, aux = routed_ffn.routed_ffn(x, p, rcfg, lc, impl=impl,
+                                           need_aux=need_aux,
+                                           seq_lengths=seq_lengths)
+    if (dispatch.use_telemetry_counters(cfg) and x.ndim == 3
+            and mode in ("prefill", "decode")):
+        # jit-pure telemetry counters: re-run the (tiny) router einsum so
+        # every execution path — kernel or jnp — reports identical loads
+        choice, _, _ = routed_ffn.route(x, p["router"], rcfg, need_aux=False)
+        aux = dict(aux)
+        aux["tel_expert_load"] = _tel_expert_load(
+            choice, rcfg.num_groups, x, seq_lengths)
+        aux["tel_expert_drop"] = jnp.asarray(
+            aux.get("dropped", 0.0), jnp.float32)
+    return y, aux
 
 
 def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train",

@@ -253,4 +253,14 @@ def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, mode: str = "train",
     else:
         out, aux = _moe_reference(x, p, cfg, need_aux,
                                   seq_lengths=seq_lengths)
+    if dispatch.use_telemetry_counters(cfg) and mode in ("prefill", "decode"):
+        # jit-pure telemetry counters (serving/telemetry.py): re-run the
+        # tiny router einsum so kernel and jnp paths report identical loads
+        from repro.models.ffn import _tel_expert_load
+        choice, _, _ = _route_experts(p, x, cfg)
+        aux = dict(aux)
+        aux["tel_expert_load"] = _tel_expert_load(
+            choice, cfg.num_experts, x, seq_lengths)
+        aux["tel_expert_drop"] = jnp.asarray(
+            aux.get("dropped", 0.0), jnp.float32)
     return (out[0] if squeeze else out), aux

@@ -29,6 +29,17 @@ from repro.sharding import shard
 AUX_KEYS = ("lb_loss", "dropped", "qerr")
 
 
+def _merge_tel(acc: dict, src: dict) -> None:
+    """Fold a layer's telemetry counters (tel_* aux entries, emitted only
+    when dispatch.use_telemetry_counters(cfg)) into ``acc`` in place.
+    Unlike AUX_KEYS these are not scalars — shapes like (B,) or (B, G)
+    are summed across the blocks of one pattern unit and kept per-unit
+    by the scan (serving/telemetry.py drains them once per iteration)."""
+    for k, v in src.items():
+        if k.startswith("tel_"):
+            acc[k] = acc[k] + v if k in acc else v
+
+
 # ---------------------------------------------------------------- blocks
 def block_defs(cfg: ModelConfig, kind: str) -> dict:
     d = cfg.d_model
@@ -83,6 +94,7 @@ def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
     for k in AUX_KEYS:
         if k in a_aux:
             aux[k] = aux[k] + jnp.asarray(a_aux[k], jnp.float32)
+    _merge_tel(aux, a_aux)
     x = x + y.astype(x.dtype)
     if "ffn" in p:
         h2 = layers.apply_norm(p["norm_ffn"], x, cfg.norm)
@@ -98,6 +110,7 @@ def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
         for k in AUX_KEYS:
             if k in f_aux:
                 aux[k] = aux[k] + jnp.asarray(f_aux[k], jnp.float32)
+        _merge_tel(aux, f_aux)
     return x, new_cache, aux
 
 
@@ -266,6 +279,7 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             new_caches[name] = nc
             for k in AUX_KEYS:
                 aux_u[k] = aux_u[k] + aux[k]
+            _merge_tel(aux_u, aux)
         ys: Dict[str, Any] = {"aux": aux_u}
         if unit_c is not None:
             ys["cache"] = new_caches
@@ -282,6 +296,9 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
     x, ys = maybe_scan(body, x, xs)
     for k in AUX_KEYS:
         aux_total[k] = aux_total[k] + jnp.sum(ys["aux"][k])
+    for k, v in ys["aux"].items():
+        if k.startswith("tel_"):
+            aux_total[k] = v          # stacked per scan unit: (U, ...)
     new_caches = {"units": ys["cache"]} if caches is not None else None
 
     tail = _tail_kinds(cfg)
@@ -298,6 +315,12 @@ def _run_blocks(params: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
             tail_caches[name] = nc
             for k in AUX_KEYS:
                 aux_total[k] = aux_total[k] + aux[k]
+            for k, v in aux.items():
+                if k.startswith("tel_"):      # tail blocks append a unit row
+                    row = jnp.asarray(v)[None]
+                    aux_total[k] = (
+                        row if k not in aux_total
+                        else jnp.concatenate([aux_total[k], row], axis=0))
         if caches is not None:
             new_caches["tail"] = tail_caches
     return x, new_caches, aux_total
@@ -342,8 +365,8 @@ def lm_prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 def lm_decode_step(params: dict, cfg: ModelConfig, caches: Any,
                    token: jax.Array, pos: jax.Array,
                    kv_valid: Optional[jax.Array] = None,
-                   page_table: Optional[jax.Array] = None
-                   ) -> Tuple[Any, jax.Array]:
+                   page_table: Optional[jax.Array] = None,
+                   return_counters: bool = False):
     """One token for every sequence in the batch.  token: (B,);
     pos: () shared position, or (B,) per-slot positions (continuous
     batching decodes slots sitting at ragged depths).
@@ -352,13 +375,21 @@ def lm_decode_step(params: dict, cfg: ModelConfig, caches: Any,
     otherwise each layer rederives it from its cache's slot positions.
     page_table: optional (B, max_pages) slot->page map — signals that the
     attention caches in ``caches`` are paged pools (init_caches was called
-    with kv_pages); None means the contiguous strip layout."""
+    with kv_pages); None means the contiguous strip layout.
+    return_counters: also return the telemetry counter tree (tel_* aux
+    entries, stacked per pattern unit) as a third element — requires
+    ``spt.telemetry`` != "off" for the tree to be non-empty.  The default
+    keeps the exact two-element return so existing traces are unchanged."""
     x = _embed_inputs(params, cfg, {"tokens": token[:, None]}, pos0=pos)
-    x, caches, _ = _run_blocks(params, cfg, x, mode="decode", caches=caches,
-                               pos=pos, remat=False, kv_valid=kv_valid,
-                               page_table=page_table)
+    x, caches, aux = _run_blocks(params, cfg, x, mode="decode", caches=caches,
+                                 pos=pos, remat=False, kv_valid=kv_valid,
+                                 page_table=page_table)
     x = layers.apply_norm(params["final_norm"], x, cfg.norm)
-    return caches, logits_of(params, cfg, x)
+    logits = logits_of(params, cfg, x)
+    if return_counters:
+        tel = {k: v for k, v in aux.items() if k.startswith("tel_")}
+        return caches, logits, tel
+    return caches, logits
 
 
 # ------------------------------------------------- serving cache plumbing
@@ -401,7 +432,7 @@ def length_sensitive(cfg: ModelConfig) -> bool:
 
 def lm_prefill_ragged(params: dict, cfg: ModelConfig,
                       batch: Dict[str, jax.Array], lengths: jax.Array,
-                      max_len: int) -> Tuple[Any, jax.Array]:
+                      max_len: int, return_counters: bool = False):
     """Prefill a (B, S) batch of right-padded prompts of per-sequence
     `lengths` (total model positions, i.e. including any frontend tokens).
     Returns (caches, logits at each sequence's last real position).
@@ -416,14 +447,19 @@ def lm_prefill_ragged(params: dict, cfg: ModelConfig,
     caches = init_caches(cfg, bsz, max_len)
     x = _embed_inputs(params, cfg, batch)
     sl = lengths if length_sensitive(cfg) else None
-    x, caches, _ = _run_blocks(params, cfg, x, mode="prefill", caches=caches,
-                               pos=0, remat=False, seq_lengths=sl)
+    x, caches, aux = _run_blocks(params, cfg, x, mode="prefill",
+                                 caches=caches, pos=0, remat=False,
+                                 seq_lengths=sl)
     idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
     x_last = jnp.take_along_axis(
         x, idx[:, None, None].astype(jnp.int32), axis=1)        # (B, 1, d)
     x_last = layers.apply_norm(params["final_norm"], x_last, cfg.norm)
     caches = _mask_invalid_slots(caches, lengths)
-    return caches, logits_of(params, cfg, x_last)
+    logits = logits_of(params, cfg, x_last)
+    if return_counters:
+        tel = {k: v for k, v in aux.items() if k.startswith("tel_")}
+        return caches, logits, tel
+    return caches, logits
 
 
 def write_slot_caches_rows(dst: dict, rows: dict, slots: jax.Array) -> dict:

@@ -108,18 +108,39 @@ def check_invariants(eng: Engine) -> List[str]:
 class Watchdog:
     """``on_iteration`` hook asserting the scheduler/allocator invariants
     after every scheduling iteration — a leak trips at the iteration that
-    introduced it, with the full violation list in the error."""
+    introduced it, with the full violation list in the error.
 
-    def __init__(self) -> None:
+    When the engine runs with telemetry on, a trip also dumps the metrics
+    snapshot and the last ``dump_events`` lifecycle events to stderr — the
+    flight recorder for postmortems (what was in flight, which request
+    transitions led up to the violation)."""
+
+    def __init__(self, dump_events: int = 40) -> None:
         self.iterations = 0
+        self.dump_events = dump_events
 
     def __call__(self, eng: Engine, iteration: int) -> None:
         self.iterations += 1
         bad = check_invariants(eng)
         if bad:
+            self._dump(eng, iteration, bad)
             raise AssertionError(
                 f"invariant violation at iteration {iteration}: "
                 + "; ".join(bad))
+
+    def _dump(self, eng: Engine, iteration: int, bad: List[str]) -> None:
+        import json
+        import sys
+        st = eng._live
+        dump = {"iteration": iteration, "violations": bad}
+        if st is not None:
+            dump["metrics"] = st.stats.snapshot().as_dict()
+        rec = eng.recorder
+        if rec is not None:
+            dump["device"] = rec.device_aggregates()
+            dump["recent_events"] = rec.recent_events(self.dump_events)
+        print("WATCHDOG DUMP " + json.dumps(dump, default=str),
+              file=sys.stderr)
 
 
 def compose(*hooks: Optional[Callable]) -> Callable:
@@ -258,10 +279,15 @@ def _main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-layout", default="paged",
                     choices=("contiguous", "paged"))
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable trace.json here "
+                         "(turns telemetry=trace on for the soak)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch).with_spt(kv_layout=args.kv_layout,
                                                 kv_page_size=16)
+    if args.trace_out:
+        cfg = cfg.with_spt(telemetry="trace")
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -277,6 +303,21 @@ def _main() -> int:
     lost = [i for i, c in enumerate(out) if c is None]
     ok = (not lost and report["completions"] == eng.last_stats.submitted
           and report["injected"].get("forced_preempt", 0) >= 1)
+    if args.trace_out:
+        from repro.serving import trace_export
+        rec = eng.last_recorder
+        trace = trace_export.write_trace(rec, args.trace_out)
+        errs = trace_export.validate_chrome_trace(trace)
+        # every submitted uid (soak requests AND injected ones) must own
+        # a lane in the trace — a missing lane is a lost request the
+        # completion count could still hide
+        submitted = {c.uid for c in out}
+        missing = sorted(submitted - trace_export.trace_uids(trace))
+        report["trace_events"] = len(trace["traceEvents"])
+        report["trace_schema_errors"] = errs
+        report["trace_missing_uids"] = missing
+        ok = ok and not errs and not missing
+    report["metrics"] = eng.last_stats.snapshot().as_dict()
     print(json.dumps({"ok": ok, **report}, indent=1))
     return 0 if ok else 1
 

@@ -71,6 +71,8 @@ from repro.configs.base import ModelConfig
 from repro.core import dispatch as kdispatch
 from repro.models import attention, encdec, ffn, transformer
 from repro.serving import kv_pages as kvp
+from repro.serving.telemetry import (MetricsSnapshot, Reservoir,
+                                     TelemetryRecorder)
 
 
 def build_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
@@ -241,14 +243,23 @@ class ServeStats:
     rejections: int = 0                    # invalid requests isolated
     cancelled: int = 0                     # cancel() mid-queue/mid-stream
     shed: int = 0                          # TTFT deadline lapsed in queue
-    # per-request latency samples (wall clock; percentiles in as_dict)
-    ttft_samples: List[float] = dataclasses.field(default_factory=list)
-    tpot_samples: List[float] = dataclasses.field(default_factory=list)
+    # per-request latency samples: bounded reservoirs (Algorithm R,
+    # deterministic seeds) so week-long serve() runs don't grow host
+    # memory — the mean stays exact, percentiles carry sampling error
+    # only past the cap (serving/telemetry.py)
+    ttft_samples: Reservoir = dataclasses.field(
+        default_factory=lambda: Reservoir(cap=2048, seed=17))
+    tpot_samples: Reservoir = dataclasses.field(
+        default_factory=lambda: Reservoir(cap=2048, seed=29))
     # paged KV cache (zeros when kv_layout="contiguous")
     page_size: int = 0
     kv_pages_total: int = 0                # pool capacity in pages
     kv_pages_peak: int = 0                 # peak pages in use
     admission_stalls: int = 0              # free slot but no pages
+    # device-counter aggregates (keep_rate, expert_load_imbalance, ...)
+    # merged in by the telemetry recorder — empty when telemetry is off,
+    # so as_dict stays byte-identical to the pre-telemetry engine
+    device: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def prefill_tok_s(self) -> float:
@@ -261,13 +272,14 @@ class ServeStats:
     @property
     def ttft_avg_s(self) -> float:
         """Mean time-to-first-token (the first token comes out of prefill,
-        so this is prefill latency + any queueing behind earlier groups)."""
-        return (sum(self.ttft_samples) / len(self.ttft_samples)
-                if self.ttft_samples else 0.0)
+        so this is prefill latency + any queueing behind earlier groups).
+        Exact over every sample seen, not just the retained reservoir."""
+        return self.ttft_samples.mean
 
     @staticmethod
-    def _pctl(xs: List[float], q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+    def _pctl(xs, q: float) -> float:
+        vals = xs.values if isinstance(xs, Reservoir) else list(xs)
+        return float(np.percentile(np.array(vals), q)) if vals else 0.0
 
     @property
     def ttft_p50_s(self) -> float:
@@ -294,33 +306,56 @@ class ServeStats:
         return (self.admitted / self.prefill_batches
                 if self.prefill_batches else 0.0)
 
+    # as_dict key order the benchmarks/tests have always consumed —
+    # snapshot() keys not in this tuple (device-counter aggregates)
+    # append after it, sorted
+    LEGACY_ORDER = (
+        "prefill_s", "decode_s", "prefill_tokens", "decode_tokens",
+        "decode_steps", "prefill_tok_s", "decode_tok_s", "admitted",
+        "completed", "prefill_batches", "prefill_batch_occupancy",
+        "ttft_avg_s", "ttft_max_s", "ttft_p50_s", "ttft_p99_s",
+        "tpot_p50_s", "tpot_p99_s", "preemptions", "rejections",
+        "cancelled", "shed", "page_size", "kv_pages_total",
+        "kv_pages_peak", "admission_stalls")
+
+    def snapshot(self) -> MetricsSnapshot:
+        """Point-in-time counters/gauges/histograms view — what as_dict
+        flattens, what the chaos watchdog dumps on invariant failures."""
+        counters: Dict[str, float] = {
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "decode_steps": self.decode_steps,
+            "admitted": self.admitted, "completed": self.completed,
+            "prefill_batches": self.prefill_batches,
+            "preemptions": self.preemptions,
+            "rejections": self.rejections,
+            "cancelled": self.cancelled, "shed": self.shed}
+        gauges: Dict[str, float] = {
+            "prefill_s": round(self.prefill_s, 4),
+            "decode_s": round(self.decode_s, 4),
+            "prefill_tok_s": round(self.prefill_tok_s, 1),
+            "decode_tok_s": round(self.decode_tok_s, 1),
+            "prefill_batch_occupancy": round(
+                self.prefill_batch_occupancy, 2)}
+        if self.kv_pages_total:
+            gauges.update(page_size=self.page_size,
+                          kv_pages_total=self.kv_pages_total,
+                          kv_pages_peak=self.kv_pages_peak,
+                          admission_stalls=self.admission_stalls)
+        hists = {
+            "ttft": {"avg_s": round(self.ttft_avg_s, 4),
+                     "max_s": round(self.ttft_s_max, 4),
+                     "p50_s": round(self.ttft_p50_s, 4),
+                     "p99_s": round(self.ttft_p99_s, 4)},
+            "tpot": {"p50_s": round(self.tpot_p50_s, 5),
+                     "p99_s": round(self.tpot_p99_s, 5)}}
+        counters.update(self.device)
+        return MetricsSnapshot(counters=counters, gauges=gauges,
+                               histograms=hists,
+                               legacy_order=self.LEGACY_ORDER)
+
     def as_dict(self) -> Dict[str, float]:
-        return {"prefill_s": round(self.prefill_s, 4),
-                "decode_s": round(self.decode_s, 4),
-                "prefill_tokens": self.prefill_tokens,
-                "decode_tokens": self.decode_tokens,
-                "decode_steps": self.decode_steps,
-                "prefill_tok_s": round(self.prefill_tok_s, 1),
-                "decode_tok_s": round(self.decode_tok_s, 1),
-                "admitted": self.admitted, "completed": self.completed,
-                "prefill_batches": self.prefill_batches,
-                "prefill_batch_occupancy": round(
-                    self.prefill_batch_occupancy, 2),
-                "ttft_avg_s": round(self.ttft_avg_s, 4),
-                "ttft_max_s": round(self.ttft_s_max, 4),
-                "ttft_p50_s": round(self.ttft_p50_s, 4),
-                "ttft_p99_s": round(self.ttft_p99_s, 4),
-                "tpot_p50_s": round(self.tpot_p50_s, 5),
-                "tpot_p99_s": round(self.tpot_p99_s, 5),
-                "preemptions": self.preemptions,
-                "rejections": self.rejections,
-                "cancelled": self.cancelled,
-                "shed": self.shed,
-                **({"page_size": self.page_size,
-                    "kv_pages_total": self.kv_pages_total,
-                    "kv_pages_peak": self.kv_pages_peak,
-                    "admission_stalls": self.admission_stalls}
-                   if self.kv_pages_total else {})}
+        return self.snapshot().as_dict()
 
 
 @dataclasses.dataclass
@@ -429,6 +464,15 @@ class Engine:
         # live scheduler state while serve()/run() is on the stack —
         # submit()/cancel()/preempt() and the chaos watchdog read it
         self._live: Optional[_SchedState] = None
+        # observability (serving/telemetry.py): "off" adds nothing to the
+        # compiled chunk (jaxpr.telemetry-cost audit); "counters" threads
+        # the jit-pure device-counter tree through the chunk carry and
+        # drains it once per scheduling iteration; "trace" additionally
+        # records the host-side request/scheduler event timeline
+        self._tel_mode = kdispatch.telemetry_mode(cfg)
+        self._tel_counters = kdispatch.use_telemetry_counters(cfg)
+        self.recorder: Optional[TelemetryRecorder] = None      # live run
+        self.last_recorder: Optional[TelemetryRecorder] = None
         # disaggregated prefill scheduler: up to prefill_batch queued
         # requests drain through ONE batched ragged prefill call per
         # admission group (prefill_batch=1 == the old serial admission).
@@ -533,10 +577,12 @@ class Engine:
     def _get_prefill(self) -> Callable:
         if self._prefill_one is None:
             cfg, max_len = self.cfg, self.max_len
+            tel_on = self._tel_counters
 
             def fn(params, batch, lengths):
-                return transformer.lm_prefill_ragged(params, cfg, batch,
-                                                     lengths, max_len)
+                return transformer.lm_prefill_ragged(
+                    params, cfg, batch, lengths, max_len,
+                    return_counters=tel_on)
             self._prefill_one = jax.jit(fn) if self._use_jit else fn
         return self._prefill_one
 
@@ -546,7 +592,7 @@ class Engine:
         bucket; their results are discarded and their cache rows dropped
         by the scatter).  Resumed (preempted) rows prefill prompt +
         regenerated tokens — the recompute path.  Returns (cache_rows,
-        logits (Bpb, 1, V), Bpb)."""
+        logits (Bpb, 1, V), Bpb, tel-counter tree or None)."""
         cfg = self.cfg
         frontend = cfg.frontend_tokens if cfg.frontend else 0
         rows_toks = [it.prefill_tokens() for it in group]
@@ -565,10 +611,43 @@ class Engine:
                     frontend, cfg.d_model)
             batch["frontend_embeds"] = jnp.asarray(fe)
         lengths = jnp.asarray(frontend + lens, jnp.int32)
-        rows, logits = self._get_prefill()(self.params, batch, lengths)
-        return rows, logits, bpb
+        out = self._get_prefill()(self.params, batch, lengths)
+        if self._tel_counters:
+            rows, logits, tel = out
+        else:
+            (rows, logits), tel = out, None
+        return rows, logits, bpb, tel
 
     # ------------------------------------------------------------- decode
+    def _counter_shapes(self, slots: int) -> Dict[str, Any]:
+        """Abstract tel_* counter tree ONE decode step emits for this
+        engine's exact cache layout — derived via eval_shape of the same
+        lm_decode_step call the compiled chunk makes, so the chunk carry's
+        counter block never drifts from the model's emission."""
+        cfg = self.cfg
+        caches = abstract_decode_caches(
+            cfg, slots, self.max_len,
+            kv_pages=self.kv_pages if self._paged else None)
+        tok = jax.ShapeDtypeStruct((slots,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+        if self._paged:
+            view = kvp.view_len(self.max_len, self.page_size)
+            kvv = jax.ShapeDtypeStruct((slots, view), jnp.bool_)
+            pt = jax.ShapeDtypeStruct(
+                (slots, self.max_pages_per_slot), jnp.int32)
+            _, _, tel = jax.eval_shape(
+                lambda p, c, t, q, m, g: transformer.lm_decode_step(
+                    p, cfg, c, t, q, kv_valid=m, page_table=g,
+                    return_counters=True),
+                self.params, caches, tok, pos, kvv, pt)
+        else:
+            kvv = jax.ShapeDtypeStruct((slots, self.max_len), jnp.bool_)
+            _, _, tel = jax.eval_shape(
+                lambda p, c, t, q, m: transformer.lm_decode_step(
+                    p, cfg, c, t, q, kv_valid=m, return_counters=True),
+                self.params, caches, tok, pos, kvv)
+        return tel
+
     def _get_chunk(self, slots: int, max_gen: int, greedy: bool,
                    eos_id: Optional[int], use_topp: bool = False
                    ) -> Callable:
@@ -581,6 +660,12 @@ class Engine:
         paged, ps = self._paged, self.page_size
         if paged:
             view = kvp.view_len(self.max_len, ps)
+        # telemetry counters ride the while_loop carry (appended at the
+        # tuple END so cond's c[0]/c[6] indexing is unchanged) and drain
+        # to host ONCE per chunk; tel_off traces the byte-identical
+        # pre-telemetry chunk (jaxpr.telemetry-cost audit)
+        tel_on = self._tel_counters
+        tel_shapes = self._counter_shapes(slots) if tel_on else {}
 
         def sample_fn(keys, n, lg, temps, topks, topps):
             """Per-slot temperature + top-k + top-p sampling; slots with
@@ -621,7 +706,10 @@ class Engine:
                 return (c[0] < chunk_steps) & jnp.any(c[6])
 
             def body(c):
-                t, caches, page_table, astate, tok, pos, active, n, buf = c
+                (t, caches, page_table, astate, tok, pos, active, n,
+                 buf) = c[:9]
+                ctr = c[9] if tel_on else None
+                ok = None
                 if paged:
                     # grow pages in-loop: a slot writing the first row of a
                     # new page pops one from the free list (admission
@@ -639,9 +727,9 @@ class Engine:
                         (jnp.arange(view, dtype=jnp.int32)[None, :]
                          <= pos[:, None])
                         & kvp.occupancy(page_table, ps))
-                    caches, logits = transformer.lm_decode_step(
+                    step_out = transformer.lm_decode_step(
                         params, cfg, caches, tok, pos, kv_valid=kv_valid,
-                        page_table=page_table)
+                        page_table=page_table, return_counters=tel_on)
                 else:
                     # slot validity from the engine's per-slot positions,
                     # built ONCE per step and shared by every attention
@@ -651,13 +739,46 @@ class Engine:
                     kv_valid = (jnp.arange(cache_len,
                                            dtype=jnp.int32)[None, :]
                                 <= pos[:, None])
-                    caches, logits = transformer.lm_decode_step(
-                        params, cfg, caches, tok, pos, kv_valid=kv_valid)
+                    step_out = transformer.lm_decode_step(
+                        params, cfg, caches, tok, pos, kv_valid=kv_valid,
+                        return_counters=tel_on)
+                if tel_on:
+                    caches, logits, tel = step_out
+                else:
+                    caches, logits = step_out
+                    tel = None
                 lg = logits[:, -1].astype(jnp.float32)          # (B, V)
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 else:
                     nxt = sample_fn(keys, n, lg, temps, topks, topps)
+                if tel_on:
+                    # accumulate this step's counters, weighting per-slot
+                    # leaves by the CURRENT active mask (retired slots
+                    # decode dead air inside a chunk — their counts would
+                    # pollute keep-rate / expert-load aggregates)
+                    amask = active.astype(jnp.float32)
+
+                    def _acc(c0, v):
+                        v = v.astype(jnp.float32)
+                        if v.ndim >= 2 and v.shape[1] == slots:
+                            w = amask.reshape(
+                                (1, slots) + (1,) * (v.ndim - 2))
+                            v = v * w
+                        return c0 + v
+                    ctr = dict(ctr)
+                    for k, v in tel.items():
+                        ctr[k] = _acc(ctr[k], v)
+                    ctr["decode_tokens"] = ctr["decode_tokens"] + amask.sum()
+                    if paged:
+                        ctr["pages_allocated"] = (
+                            ctr["pages_allocated"]
+                            + ok.astype(jnp.float32).sum())
+                    if not greedy:
+                        ctr["sampled_tokens"] = (
+                            ctr["sampled_tokens"]
+                            + (active & (temps > 0.0))
+                            .astype(jnp.float32).sum())
                 bidx = jnp.arange(slots, dtype=jnp.int32)
                 col = jnp.clip(n, 0, max_gen - 1)
                 buf = buf.at[bidx, col].set(
@@ -670,15 +791,26 @@ class Engine:
                     done |= nxt == eos_id
                 tok = jnp.where(active, nxt, tok)
                 active = active & ~done
-                return (t + 1, caches, page_table, astate, tok, pos,
+                base = (t + 1, caches, page_table, astate, tok, pos,
                         active, n, buf)
+                return base + ((ctr,) if tel_on else ())
 
+            init = (jnp.zeros((), jnp.int32), caches, page_table, astate,
+                    tok, pos, active, n, buf)
+            if tel_on:
+                ctr0 = {k: jnp.zeros(s.shape, jnp.float32)
+                        for k, s in tel_shapes.items()}
+                ctr0["decode_tokens"] = jnp.zeros((), jnp.float32)
+                if paged:
+                    ctr0["pages_allocated"] = jnp.zeros((), jnp.float32)
+                if not greedy:
+                    ctr0["sampled_tokens"] = jnp.zeros((), jnp.float32)
+                init = init + (ctr0,)
+            out = jax.lax.while_loop(cond, body, init)
             (t, caches, page_table, astate, tok, pos, active, n,
-             buf) = jax.lax.while_loop(
-                cond, body,
-                (jnp.zeros((), jnp.int32), caches, page_table, astate, tok,
-                 pos, active, n, buf))
-            return caches, page_table, astate, tok, pos, active, n, buf, t
+             buf) = out[:9]
+            res = (caches, page_table, astate, tok, pos, active, n, buf, t)
+            return res + ((out[9],) if tel_on else ())
 
         if self._use_jit:
             chunk = jax.jit(chunk, donate_argnums=(1, 2, 3))
@@ -731,14 +863,23 @@ class Engine:
         order = st.order
         st.order += 1
         st.stats.submitted += 1
+        rec = self.recorder
+        wall = time.perf_counter()
+        if rec is not None:
+            rec.event(req.uid, "submit", wall, prompt_len=len(req.tokens),
+                      priority=req.priority)
         why = self._validate(req, st.seen_uids)
         if why is not None:
             st.stats.rejections += 1
+            if rec is not None:
+                rec.event(req.uid, "rejected", wall, detail=why)
             st.results[order] = Completion(
                 uid=req.uid, tokens=[], finish_reason="rejected",
                 prompt_len=len(req.tokens), detail=why)
             return False
         st.seen_uids.add(req.uid)
+        if rec is not None:
+            rec.event(req.uid, "queued", wall)
         temp = (st.default_temp if req.temperature is None
                 else req.temperature)
         if (not st.greedy) and 0.0 < req.top_p < 1.0:
@@ -757,10 +898,14 @@ class Engine:
         st = self._live
         if st is None:
             return False
+        rec = self.recorder
         for qi, it in enumerate(st.queue):
             if it.req.uid == uid:
                 del st.queue[qi]
                 st.stats.cancelled += 1
+                if rec is not None:
+                    rec.event(uid, "cancelled", time.perf_counter(),
+                              detail="while queued")
                 st.results[it.order] = Completion(
                     uid=uid, tokens=list(it.done),
                     finish_reason="cancelled",
@@ -771,6 +916,10 @@ class Engine:
         for b, it in enumerate(st.slot_item):
             if it is not None and it.req.uid == uid:
                 st.stats.cancelled += 1
+                if rec is not None:
+                    rec.event(uid, "cancelled", time.perf_counter(),
+                              detail="mid-stream",
+                              n_gen=int(st.n_gen[b]))
                 st.results[it.order] = Completion(
                     uid=uid, tokens=st.buf[b, :st.n_gen[b]].tolist(),
                     finish_reason="cancelled",
@@ -837,6 +986,9 @@ class Engine:
         reason = ("eos" if st.eos_id is not None and toks
                   and toks[-1] == st.eos_id else "length")
         now_wall = time.perf_counter()
+        if self.recorder is not None:
+            self.recorder.event(it.req.uid, "retired", now_wall,
+                                finish=reason, n_gen=int(st.n_gen[b]))
         if it.first_tok_wall is not None and int(st.n_gen[b]) > 1:
             st.stats.tpot_samples.append(
                 (now_wall - it.first_tok_wall) / (int(st.n_gen[b]) - 1))
@@ -851,6 +1003,9 @@ class Engine:
         if self._paged:
             used = self.kv_pages - int(jax.device_get(st.astate["top"]))
             st.stats.kv_pages_peak = max(st.stats.kv_pages_peak, used)
+            if self.recorder is not None:
+                self.recorder.gauge("kv_pages_used", time.perf_counter(),
+                                    used)
 
     def _preempt_slot(self, b: int) -> None:
         """Evict slot b: save its generated tokens on the queue item,
@@ -862,6 +1017,10 @@ class Engine:
         it.done = st.buf[b, :st.n_gen[b]].tolist()
         it.preemptions += 1
         st.stats.preemptions += 1
+        if self.recorder is not None:
+            self.recorder.event(it.req.uid, "preempted",
+                                time.perf_counter(), slot=b,
+                                n_gen=int(st.n_gen[b]))
         self._release_slot(b)
         st.queue.append(it)
         st.queue.sort(key=_queue_key)
@@ -901,6 +1060,10 @@ class Engine:
             if (d is not None and it.first_tok_wall is None
                     and now - it.arrival_s > d):
                 st.stats.shed += 1
+                if self.recorder is not None:
+                    self.recorder.event(it.req.uid, "shed",
+                                        time.perf_counter(),
+                                        deadline_s=d)
                 st.results[it.order] = Completion(
                     uid=it.req.uid, tokens=[], finish_reason="shed",
                     prompt_len=len(it.req.tokens),
@@ -1017,7 +1180,7 @@ class Engine:
         frontend = cfg.frontend_tokens if cfg.frontend else 0
         ps = self.page_size
         t0 = time.perf_counter()
-        rows, logits, bpb = self._prefill_group(group)
+        rows, logits, bpb, tel = self._prefill_group(group)
         slot_vec = np.full(bpb, -1, np.int32)   # -1 rows: dummies, drop
         assigned: List[int] = []
         for i, it in enumerate(group):
@@ -1045,6 +1208,18 @@ class Engine:
         logits = jax.block_until_ready(logits)
         jax.block_until_ready(st.caches)
         now_wall = time.perf_counter()
+        rec = self.recorder
+        if rec is not None and tel is not None:
+            # trim dummy bucket rows before folding: real rows are the
+            # first len(group) of the Bpb padding bucket
+            ng = len(group)
+            rec.drain_counters({
+                k: (v[:, :ng] if getattr(v, "ndim", 0) >= 2
+                    and v.shape[1] == bpb else v)
+                for k, v in jax.device_get(tel).items()})
+        if rec is not None:
+            rec.span("prefill_batch", t0, now_wall, st.iteration,
+                     group=len(group), bucket_rows=bpb)
         st.stats.prefill_s += now_wall - t0
         st.stats.prefill_batches += 1
         st.stats.prefill_tokens += sum(
@@ -1066,6 +1241,9 @@ class Engine:
                 st.tok[b] = it.done[-1]
                 st.pos[b] = frontend + len(it.prefill_tokens())
                 st.n_gen[b] = nd
+                if rec is not None:
+                    rec.event(r.uid, "resumed", now_wall, slot=b,
+                              regenerated=nd)
                 done_now = (nd >= r.max_new_tokens
                             or (st.eos_id is not None
                                 and it.done[-1] == st.eos_id))
@@ -1073,6 +1251,9 @@ class Engine:
                 if done_now:
                     self._retire(b)
                 continue
+            if rec is not None:
+                rec.event(r.uid, "admitted", now_wall, slot=b,
+                          prompt_len=len(r.tokens))
             lg = np.asarray(logits[i, -1], np.float32)
             if st.greedy or it.temp <= 0.0:
                 first = int(lg.argmax())
@@ -1101,6 +1282,9 @@ class Engine:
             st.stats.ttft_s_max = max(st.stats.ttft_s_max, ttft)
             st.stats.ttft_samples.append(ttft)
             it.first_tok_wall = now_wall
+            if rec is not None:
+                rec.event(r.uid, "first_token", now_wall,
+                          ttft_s=round(ttft, 6))
             st.tok[b] = first
             st.pos[b] = frontend + len(r.tokens)
             st.n_gen[b] = 1
@@ -1128,8 +1312,19 @@ class Engine:
                        jnp.asarray(st.topks), jnp.asarray(st.topps))
         out = jax.block_until_ready(out)
         (st.caches, st.page_table, st.astate, tok_d, pos_d, act_d, n_d,
-         buf_d, steps) = out
-        st.stats.decode_s += time.perf_counter() - t0
+         buf_d, steps) = out[:9]
+        t1 = time.perf_counter()
+        st.stats.decode_s += t1 - t0
+        rec = self.recorder
+        if rec is not None and self._tel_counters:
+            # ONE host fetch per chunk, inside the already-synced region
+            rec.drain_counters(jax.device_get(out[9]))
+            t2 = time.perf_counter()
+            rec.span("drain", t1, t2, st.iteration)
+        if rec is not None:
+            rec.span("decode_chunk", t0, t1, st.iteration,
+                     steps=int(steps),
+                     active=int(np.array(act_d).sum()))
         self._track_peak()
         prev_total = int(st.n_gen.sum())
         # writable host mirrors (np.asarray of a jax array is read-only)
@@ -1198,6 +1393,13 @@ class Engine:
             topps=np.zeros(slots, np.float32),
             slot_item=[None] * slots, queue=[], results={},
             seen_uids=set(), default_temp=temperature, t0_wall=t0)
+        if self._tel_mode != "off":
+            rec = TelemetryRecorder(
+                mode=("trace" if self._tel_mode == "trace"
+                      else "counters"),
+                time_origin=t0)
+            self.recorder = rec
+            self.last_recorder = rec
         self._live = st
         return st
 
@@ -1209,12 +1411,21 @@ class Engine:
         injection / invariant watchdog).  Returns True when a decode
         chunk ran."""
         st = self._live
+        rec = self.recorder
         now = st.clock()
         if schedule is not None:
             for r in schedule.due(now):
                 self.submit(r, now=now)
         self._shed_expired(now)
+        tp0 = time.perf_counter()
+        pre_before = st.stats.preemptions
         self._pressure_preempt(now)
+        if rec is not None and st.stats.preemptions > pre_before:
+            rec.span("pressure_preempt", tp0, time.perf_counter(),
+                     st.iteration,
+                     evicted=st.stats.preemptions - pre_before)
+        ta0 = time.perf_counter()
+        admitted_before = st.stats.admitted
         stalled_seen: set = set()
         while True:
             group = self._form_group(stalled_seen)
@@ -1223,11 +1434,19 @@ class Engine:
             self._admit(group)
             if self.prefill_decode_ratio > 0 and st.active.any():
                 break           # overlap: hand control back to decode
+        if rec is not None and st.stats.admitted > admitted_before:
+            rec.span("admission", ta0, time.perf_counter(), st.iteration,
+                     admitted=st.stats.admitted - admitted_before,
+                     stalled=len(stalled_seen))
         self._track_peak()
         stepped = False
         if st.active.any():
             self._decode_once()
             stepped = True
+        if rec is not None:
+            tg = time.perf_counter()
+            rec.gauge("queue_depth", tg, len(st.queue))
+            rec.gauge("active_slots", tg, int(st.active.sum()))
         st.iteration += 1
         if on_iteration is not None:
             on_iteration(self, st.iteration)
@@ -1276,7 +1495,11 @@ class Engine:
                     if wait > 0 and not hasattr(st.clock, "advance"):
                         time.sleep(min(wait, 0.05))
         finally:
+            rec = self.recorder
+            if rec is not None:
+                st.stats.device.update(rec.device_aggregates())
             self.last_stats = st.stats
+            self.recorder = None        # last_recorder keeps the handle
             self._live = None
         return [st.results[i] for i in range(st.order)]
 
