@@ -1,14 +1,23 @@
 #!/usr/bin/env bash
-# Static hot-path gate (runs on CPU, no benches, ~15s):
+# Static hot-path gate (runs on CPU, no benches, ~30s):
 #   1. python -m repro.analysis — jaxpr budgets/primitives over the hot
 #      entrypoints, Pallas VMEM/spec estimates, engine retrace
-#      accounting, and source lints (src/repro/analysis/).
+#      accounting, source lints, memory-lifetime liveness + donation
+#      audits, and the golden memory-signature ratchet against
+#      scripts/analysis_baselines.json (src/repro/analysis/).
 #   2. scripts/check_bench.py — checked-in BENCH_*.json ratio columns
 #      against the recorded floors in scripts/bench_floors.json.
 # scripts/ci_fast.sh runs this before pytest; REPRO_SKIP_ANALYSIS=1
 # skips it there (escape hatch for iterating on a known-violating tree).
+# REPRO_UPDATE_BASELINES=1 regenerates analysis_baselines.json before
+# the gate (the memory audit then passes by construction — commit the
+# diff), mirroring the bench_floors.json refresh workflow.
 # Extra args pass through to the analysis CLI: analyze.sh --only lint
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${REPRO_UPDATE_BASELINES:-0}" == "1" ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python scripts/update_baselines.py
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis "$@"
 python scripts/check_bench.py

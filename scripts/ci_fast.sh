@@ -23,14 +23,18 @@
 #   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
-# Static hot-path gate first (jaxpr/Pallas/trace audits + bench-ratio
-# floors, scripts/analyze.sh): a few seconds on CPU, and it fails fast
-# on the structural regressions parity tests can't see (resurrected
-# dispatch buffers, in-loop retraces, VMEM-busting BlockSpecs).
-# REPRO_SKIP_ANALYSIS=1 skips it while iterating on a known-violating
-# tree.
+# Static hot-path gate first (jaxpr/Pallas/trace audits, liveness +
+# donation audits, memory-signature ratchet, bench-ratio floors —
+# scripts/analyze.sh): ~30s on CPU, and it fails fast on the structural
+# regressions parity tests can't see (resurrected dispatch buffers,
+# in-loop retraces, VMEM-busting BlockSpecs, a doubled decode-chunk live
+# set, a lost donation).  The peak-live-bytes waterfall report is kept
+# as a CI artifact next to the chaos trace dump (same traces the audits
+# computed, so it's free).  REPRO_SKIP_ANALYSIS=1 skips it while
+# iterating on a known-violating tree.
 if [[ "${REPRO_SKIP_ANALYSIS:-0}" != "1" ]]; then
-    scripts/analyze.sh
+    REPRO_MEMORY_REPORT_OUT="${REPRO_MEMORY_REPORT_OUT:-$(mktemp -t memory_report.XXXXXX.txt)}" \
+        scripts/analyze.sh
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m "not slow" "$@"

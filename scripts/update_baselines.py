@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Regenerate scripts/analysis_baselines.json from the signatures at
+HEAD.
+
+The ``memory`` audit (src/repro/analysis/baselines.py) ratchets every
+registered entrypoint's memory signature — peak live bytes, donated
+bytes, eqn count, pallas-call count — against this file, failing CI on
+regressions *and* on unrecorded improvements.  When the audit reports
+``memory.stale-baseline`` (or you changed an entrypoint deliberately),
+run this script and commit the diff.  ``REPRO_UPDATE_BASELINES=1
+scripts/analyze.sh`` does the same before the gate runs, mirroring the
+``bench_floors.json`` refresh workflow.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import baselines  # noqa: E402
+
+
+def main() -> int:
+    entries = baselines.compute_signatures()
+    old = {}
+    if baselines.BASELINE_PATH.exists():
+        old = baselines.load_baselines()
+    doc = {
+        "note": "golden memory signatures per analysis entrypoint; "
+                "regenerate with scripts/update_baselines.py and commit "
+                "the diff (the memory audit ratchets against this file)",
+        "entries": {name: entries[name] for name in sorted(entries)},
+    }
+    baselines.BASELINE_PATH.write_text(
+        json.dumps(doc, indent=2, sort_keys=False) + "\n")
+    for name in sorted(entries):
+        sig = entries[name]
+        mark = " " if old.get(name) == sig else "*"
+        print(f"{mark} {name:<34} peak {sig['peak_live_bytes']:>12,} B  "
+              f"donated {sig['donated_bytes']:>10,} B  "
+              f"eqns {sig['eqns']:>5}  pallas {sig['pallas_calls']}")
+    for name in sorted(set(old) - set(entries)):
+        print(f"- {name} (removed)")
+    print(f"wrote {baselines.BASELINE_PATH.relative_to(REPO)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,16 @@
 """CLI: ``python -m repro.analysis`` — run every registered audit, print
 violations, exit nonzero if any fired.  ``--only jaxpr,lint`` selects
-layers; ``--list`` shows what's registered.  Wired into CI via
-``scripts/analyze.sh`` (which ``scripts/ci_fast.sh`` runs before pytest).
+layers; ``--list`` shows what's registered; ``--memory-report`` prints
+the liveness waterfalls instead of auditing (``--out`` saves a copy).
+When ``REPRO_MEMORY_REPORT_OUT`` is set, a normal audit run also writes
+the report there (reusing the traces the audits already computed) so CI
+keeps it as an artifact.  Wired into CI via ``scripts/analyze.sh``
+(which ``scripts/ci_fast.sh`` runs before pytest).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 from typing import List, Optional
@@ -16,6 +21,9 @@ from repro.analysis import jaxpr_audit    # noqa: F401
 from repro.analysis import lint           # noqa: F401
 from repro.analysis import pallas_audit   # noqa: F401
 from repro.analysis import trace_guard    # noqa: F401
+from repro.analysis import liveness       # noqa: F401
+from repro.analysis import donation       # noqa: F401
+from repro.analysis import baselines      # noqa: F401
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -28,11 +36,27 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="comma-separated audit names (default: all)")
     ap.add_argument("--list", action="store_true", dest="list_audits",
                     help="list registered audits and exit")
+    ap.add_argument("--memory-report", action="store_true",
+                    dest="memory_report",
+                    help="print the peak-live-bytes waterfalls and "
+                         "top contributors per entrypoint, then exit")
+    ap.add_argument("--out", metavar="PATH",
+                    help="with --memory-report: also write the report "
+                         "to PATH")
     args = ap.parse_args(argv)
 
     if args.list_audits:
         for name in registry.AUDITS:
             print(name)
+        return 0
+
+    if args.memory_report:
+        text = liveness.format_memory_report()
+        print(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+            print(f"[analysis] memory report written to {args.out}")
         return 0
 
     names = ([n.strip() for n in args.only.split(",") if n.strip()]
@@ -51,6 +75,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"[analysis] {e}", file=sys.stderr)
         return 2
     dt = time.perf_counter() - t0
+    artifact = os.environ.get("REPRO_MEMORY_REPORT_OUT")
+    if artifact:
+        # liveness/memory audits already traced everything; this just
+        # formats the memoized reports
+        try:
+            with open(artifact, "w") as f:
+                f.write(liveness.format_memory_report() + "\n")
+            print(f"[analysis] memory report artifact: {artifact}")
+        except Exception as e:     # artifact is best-effort, not a gate
+            print(f"[analysis] memory report artifact failed: {e}",
+                  file=sys.stderr)
     if violations:
         print(f"[analysis] FAILED: {len(violations)} violation(s) "
               f"in {dt:.1f}s")

@@ -1,0 +1,131 @@
+"""Layer 7: golden memory-signature baselines with ratchet semantics.
+
+The liveness pass (layer 5) reduces every registered memory entrypoint
+to a four-number **memory signature** — peak live bytes, donated bytes,
+eqn count, pallas-call count.  This layer diffs the signatures computed
+at HEAD against the golden copies committed to
+``scripts/analysis_baselines.json`` and fails CI on drift:
+
+  memory.regression       peak live bytes grew, or donated bytes shrank
+                          — the change made an entrypoint more
+                          memory-hungry (or lost a donation)
+  memory.stale-baseline   peak shrank or donated grew — an
+                          *improvement* the baseline doesn't record yet;
+                          refresh with ``scripts/update_baselines.py``
+                          so the win is ratcheted in and can't silently
+                          regress later
+  memory.signature-drift  pallas-call count changed, or eqn count moved
+                          more than ±10% — the program's shape changed
+                          enough that the baseline no longer describes
+                          it; re-baseline deliberately
+  memory.baseline-missing the baseline file or an entry is absent —
+                          run ``scripts/update_baselines.py``
+
+Both directions fail on purpose (mirroring ``bench_floors.json``):
+a gate that only catches regressions lets improvements evaporate
+unrecorded, and the next regression hides inside the headroom.  The
+refresh workflow is ``REPRO_UPDATE_BASELINES=1 scripts/analyze.sh`` or
+``python scripts/update_baselines.py`` directly; commit the diff.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+from repro.analysis import liveness
+from repro.analysis.registry import Violation, audit
+
+BASELINE_PATH = (pathlib.Path(__file__).resolve().parents[3]
+                 / "scripts" / "analysis_baselines.json")
+_REFRESH = "refresh: python scripts/update_baselines.py (commit the diff)"
+# eqn counts wobble with jax version / fusion details; ±10% is shape
+# drift worth a deliberate re-baseline, below that is noise
+_EQN_DRIFT_FRAC = 0.10
+_FIELDS = ("peak_live_bytes", "donated_bytes", "eqns", "pallas_calls")
+
+
+def compute_signatures() -> Dict[str, Dict[str, int]]:
+    """Signature dict per registered entrypoint, in registry order
+    (reuses the memoized liveness traces)."""
+    return {
+        name: {f: getattr(rep.signature, f) for f in _FIELDS}
+        for name, rep in liveness.all_reports().items()
+    }
+
+
+def load_baselines(path: pathlib.Path = BASELINE_PATH
+                   ) -> Dict[str, Dict[str, int]]:
+    data = json.loads(path.read_text())
+    return data["entries"]
+
+
+def diff_signatures(current: Dict[str, Dict[str, int]],
+                    golden: Dict[str, Dict[str, int]]
+                    ) -> List[Violation]:
+    """Pure ratchet: compare signatures at HEAD against the golden
+    copies.  Separated from I/O and tracing so tests can inject
+    synthetic regressions."""
+    out: List[Violation] = []
+    for name in sorted(set(current) | set(golden)):
+        if name not in golden:
+            out.append(Violation(
+                "memory.baseline-missing", name,
+                f"entrypoint has no golden signature — {_REFRESH}"))
+            continue
+        if name not in current:
+            out.append(Violation(
+                "memory.baseline-missing", name,
+                "golden signature exists but the entrypoint is no "
+                f"longer registered — {_REFRESH}"))
+            continue
+        cur, gold = current[name], golden[name]
+
+        peak_c, peak_g = cur["peak_live_bytes"], gold["peak_live_bytes"]
+        if peak_c > peak_g:
+            out.append(Violation(
+                "memory.regression", name,
+                f"peak live bytes {peak_g:,} -> {peak_c:,} "
+                f"(+{peak_c - peak_g:,}) — the live set grew"))
+        elif peak_c < peak_g:
+            out.append(Violation(
+                "memory.stale-baseline", name,
+                f"peak live bytes {peak_g:,} -> {peak_c:,} "
+                f"(-{peak_g - peak_c:,}) — improvement; {_REFRESH}"))
+
+        don_c, don_g = cur["donated_bytes"], gold["donated_bytes"]
+        if don_c < don_g:
+            out.append(Violation(
+                "memory.regression", name,
+                f"donated bytes {don_g:,} -> {don_c:,} — a donation "
+                "was lost (the input buffer now counts twice)"))
+        elif don_c > don_g:
+            out.append(Violation(
+                "memory.stale-baseline", name,
+                f"donated bytes {don_g:,} -> {don_c:,} — more donation; "
+                f"{_REFRESH}"))
+
+        pc_c, pc_g = cur["pallas_calls"], gold["pallas_calls"]
+        if pc_c != pc_g:
+            out.append(Violation(
+                "memory.signature-drift", name,
+                f"pallas-call count {pc_g} -> {pc_c} — a kernel was "
+                f"added or dropped; {_REFRESH}"))
+
+        eq_c, eq_g = cur["eqns"], gold["eqns"]
+        if abs(eq_c - eq_g) > _EQN_DRIFT_FRAC * eq_g:
+            out.append(Violation(
+                "memory.signature-drift", name,
+                f"eqn count {eq_g} -> {eq_c} (more than ±"
+                f"{_EQN_DRIFT_FRAC:.0%}) — program shape changed; "
+                f"{_REFRESH}"))
+    return out
+
+
+@audit("memory")
+def _memory_audit() -> List[Violation]:
+    if not BASELINE_PATH.exists():
+        return [Violation(
+            "memory.baseline-missing", str(BASELINE_PATH),
+            f"golden baseline file not found — {_REFRESH}")]
+    return diff_signatures(compute_signatures(), load_baselines())

@@ -1,0 +1,216 @@
+"""Layer 6: buffer-donation audit over the serving jit sites.
+
+Donation is the serving stack's only defense against paying for every
+cache twice: a jit entrypoint that carries a cache/pool/slot-state
+operand without ``donate_argnums`` holds both the input and the output
+buffer live across the call, and a donated operand whose aval matches
+no output cannot alias — XLA warns once and silently copies.  Both
+failure modes are invisible to parity tests, so this layer checks them
+statically:
+
+  donation.missing       a non-donated operand leaf (outside the exempt
+                         argnums — params are engine-owned and shared
+                         across calls) aval-matches an output leaf that
+                         no donated operand claimed: it should be
+                         donated so XLA can reuse the buffer in place
+  donation.cannot-alias  a donated operand leaf matches no output aval —
+                         the donation is a silent copy (dtype/shape
+                         drifted, or the output was dropped)
+  donation.jit-site      source lint: a ``jax.jit`` call in ``serving/``
+                         passes neither ``donate_argnums`` nor
+                         ``donate_argnames`` and carries no explicit
+                         ``# no-donate: <reason>`` marker within the two
+                         lines above it
+
+The structural checks lower each engine jit site (contiguous and paged
+layouts) over the same abstract operands the scheduler passes and read
+the donation flags back from ``jitted.lower(...).args_info`` — so the
+audit sees exactly what XLA sees, not what the source claims.
+Donated leaves claim matching outputs *first*; only leftovers can flag
+a non-donated operand, which keeps read-only operands that merely
+share an aval with an already-claimed output (e.g. the chunk's
+``limit`` vs the returned ``tok``/``pos``/``n_gen``) out of the report.
+"""
+from __future__ import annotations
+
+import ast
+import collections
+import pathlib
+from typing import Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_audit as ja
+from repro.analysis.registry import Violation, audit
+
+_SERVING_DIR = pathlib.Path(__file__).resolve().parents[1] / "serving"
+
+
+# ------------------------------------------------------ structural audit
+def _fmt(aval) -> str:
+    return f"{jnp.dtype(aval.dtype).name}{tuple(aval.shape)}"
+
+
+def _aval_key(aval) -> Tuple:
+    return (tuple(aval.shape), jnp.dtype(aval.dtype).str)
+
+
+def _leaf_infos(args_info):
+    """Flatten ``lowered.args_info`` to (path label, argnum, aval,
+    donated) rows."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(args_info)
+    rows = []
+    for path, info in leaves:
+        aval = getattr(info, "aval", None)
+        if aval is None:
+            aval = info._aval
+        # args_info wraps the positional args tuple one level deep
+        # ((args, kwargs)-shaped), so the argnum is the SECOND path key
+        path = tuple(path)
+        if len(path) > 1 and getattr(path[0], "idx", None) == 0:
+            path = path[1:]
+        argnum = getattr(path[0], "idx", None)
+        rows.append((jax.tree_util.keystr(path), argnum, aval,
+                     bool(info.donated)))
+    return rows
+
+
+def donation_violations(entry: str, jitted, args,
+                        exempt_argnums: Iterable[int] = ()
+                        ) -> List[Violation]:
+    """Lower ``jitted`` over abstract ``args`` and check every operand
+    leaf's donation flag against the output avals."""
+    exempt = frozenset(exempt_argnums)
+    lowered = jitted.lower(*args)
+    outs = jax.tree_util.tree_leaves(jax.eval_shape(jitted, *args))
+    pool = collections.Counter(_aval_key(o) for o in outs)
+    rows = _leaf_infos(lowered.args_info)
+    out: List[Violation] = []
+    for name, argnum, aval, donated in rows:     # donated claim first
+        if not donated:
+            continue
+        key = _aval_key(aval)
+        if pool[key] > 0:
+            pool[key] -= 1
+        else:
+            out.append(Violation(
+                "donation.cannot-alias", entry,
+                f"donated operand {name} {_fmt(aval)} matches no output "
+                "aval — XLA cannot alias it and silently copies"))
+    for name, argnum, aval, donated in rows:
+        if donated or argnum in exempt:
+            continue
+        key = _aval_key(aval)
+        if pool[key] > 0:
+            pool[key] -= 1
+            out.append(Violation(
+                "donation.missing", entry,
+                f"operand {name} {_fmt(aval)} aval-matches an unclaimed "
+                "output but is not donated — the input buffer stays "
+                "live across the whole call"))
+    return out
+
+
+def _tiny_engine(paged: bool):
+    from repro.serving.engine import Engine
+    spt = {"kv_layout": "paged", "kv_page_size": 16} if paged else {}
+    cfg = ja._tiny_lm_cfg(**spt)
+    params = ja._lm_params(cfg)
+    eng = Engine(cfg, params, max_len=32, jit=True, num_slots=2,
+                 decode_chunk=4)
+    return cfg, params, eng
+
+
+def engine_donation_violations() -> List[Violation]:
+    """Every jit site ``Engine.__init__`` / ``_get_prefill`` /
+    ``_get_chunk`` builds, lowered over scheduler-shaped abstract
+    operands, for both KV layouts."""
+    from repro.serving import kv_pages as kvp
+    from repro.serving.engine import abstract_decode_caches
+
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    out: List[Violation] = []
+
+    cfg, params, eng = _tiny_engine(paged=False)
+    out += donation_violations(
+        "engine._prefill", eng._prefill,
+        (params, {"tokens": i32(1, 8)}), exempt_argnums=(0,))
+    out += donation_violations(
+        "engine._decode", eng._decode,
+        (params, abstract_decode_caches(cfg, 1, 32), i32(1), i32()),
+        exempt_argnums=(0,))
+    out += donation_violations(
+        "engine._prefill_one", eng._get_prefill(),
+        (params, {"tokens": i32(2, 8)}, i32(2)), exempt_argnums=(0,))
+    out += donation_violations(
+        "engine._write_rows", eng._write_rows,
+        (abstract_decode_caches(cfg, 2, 32),
+         abstract_decode_caches(cfg, 1, 32), i32(1)))
+    out += donation_violations(
+        "engine.decode_chunk",
+        eng._get_chunk(2, 4, greedy=True, eos_id=None),
+        ja.engine_chunk_args(eng, 2, 4), exempt_argnums=(0,))
+
+    cfgp, paramsp, engp = _tiny_engine(paged=True)
+    astate = ja._abstract(kvp.init_state(engp.kv_pages))
+    pt = ja._abstract(kvp.init_page_table(2, engp.max_pages_per_slot))
+    out += donation_violations(
+        "engine._alloc_rows[paged]", engp._alloc_rows,
+        (astate, pt, i32(1), i32(1)))
+    out += donation_violations(
+        "engine._free_slot[paged]", engp._free_slot, (astate, pt, i32()))
+    out += donation_violations(
+        "engine._write_rows[paged]", engp._write_rows,
+        (abstract_decode_caches(cfgp, 2, 32, kv_pages=engp.kv_pages),
+         abstract_decode_caches(cfgp, 1, 32), i32(1), pt))
+    out += donation_violations(
+        "engine.decode_chunk[paged]",
+        engp._get_chunk(2, 4, greedy=True, eos_id=None),
+        ja.engine_chunk_args(engp, 2, 4), exempt_argnums=(0,))
+    return out
+
+
+# ----------------------------------------------------------- source lint
+def jit_site_violations(source: str, rel: str) -> List[Violation]:
+    """Every ``jax.jit(...)`` call in a serving module must either pass
+    donate_argnums/donate_argnames or carry a ``# no-donate: <reason>``
+    marker on the call line or the two lines above it."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return []
+    lines = source.splitlines()
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr == "jit"
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "jax"):
+            continue
+        kwargs = {kw.arg for kw in node.keywords}
+        if kwargs & {"donate_argnums", "donate_argnames"}:
+            continue
+        window = lines[max(0, node.lineno - 3):node.lineno]
+        if any("no-donate:" in ln for ln in window):
+            continue
+        out.append(Violation(
+            "donation.jit-site", f"{rel}:{node.lineno}",
+            "jax.jit without donate_argnums/donate_argnames — donate "
+            "the dead operands or mark the site `# no-donate: <reason>`"))
+    return out
+
+
+def run_jit_site_lint() -> List[Violation]:
+    out: List[Violation] = []
+    for path in sorted(_SERVING_DIR.glob("*.py")):
+        out += jit_site_violations(path.read_text(),
+                                   f"serving/{path.name}")
+    return out
+
+
+@audit("donation")
+def _donation_audit() -> List[Violation]:
+    return engine_donation_violations() + run_jit_site_lint()

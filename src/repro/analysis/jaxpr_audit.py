@@ -16,8 +16,11 @@ eqn.  Rules (stable ids tests key on):
                             per-slot (B, Hk, S, ·) view of the KV pool —
                             the kernel-native route reads (page_id,
                             offset) tiles directly
-  jaxpr.intermediate-budget an eqn output exceeds the entry's byte budget
-                            (default: 1.5x the largest input/param leaf)
+  jaxpr.intermediate-budget an eqn output exceeds a byte budget (rule +
+                            ``auto_budget`` kept for tests/ad-hoc use;
+                            at HEAD the per-entry byte gate is the
+                            liveness-derived memory-signature ratchet in
+                            analysis/liveness.py + analysis/baselines.py)
   jaxpr.forbidden-primitive host callbacks / prints inside a hot path
   jaxpr.accum-dtype         a dot/exp inside a Pallas kernel body does
                             not accumulate in float32
@@ -296,18 +299,16 @@ def _lm_params(cfg):
         lambda: init_tree(model_defs(cfg), jax.random.PRNGKey(0)))
 
 
-def _engine_chunk_jaxpr(cfg, slots: int = 2, max_gen: int = 4,
-                        max_len: int = 32):
-    """Trace the engine's compiled greedy decode chunk exactly as
-    ``Engine.run`` builds it (contiguous or paged placeholders, following
-    the config's kv_layout)."""
+def engine_chunk_args(eng, slots: int = 2, max_gen: int = 4):
+    """Abstract decode-chunk operands exactly as ``Engine._decode_once``
+    passes them (contiguous or paged placeholders, following the
+    engine's kv_layout).  Shared by the jaxpr trace here, the liveness
+    analyzer, and the donation auditor so all three see one signature."""
     from repro.serving import kv_pages as kvp
-    from repro.serving.engine import Engine, abstract_decode_caches
+    from repro.serving.engine import abstract_decode_caches
 
-    params = _lm_params(cfg)
-    eng = Engine(cfg, params, max_len=max_len, jit=False,
-                 num_slots=slots, decode_chunk=4)
-    chunk = eng._get_chunk(slots, max_gen, greedy=True, eos_id=None)
+    cfg, max_len = eng.cfg, eng.max_len
+    params = _abstract(eng.params)
     if eng._paged:
         caches = abstract_decode_caches(cfg, slots, max_len,
                                         kv_pages=eng.kv_pages)
@@ -320,13 +321,27 @@ def _engine_chunk_jaxpr(cfg, slots: int = 2, max_gen: int = 4,
         astate = _abstract(kvp.init_state(1))
     i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
     f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
-    args = (params, caches, page_table, astate,
+    return (params, caches, page_table, astate,
             i32(slots), i32(slots),                       # tok, pos
             jax.ShapeDtypeStruct((slots,), jnp.bool_),    # active
             i32(slots), i32(slots),                       # n_gen, limit
             i32(slots, max_gen),                          # buf
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),  # keys
             f32(slots), i32(slots), f32(slots))           # temps/topks/topps
+
+
+def _engine_chunk_jaxpr(cfg, slots: int = 2, max_gen: int = 4,
+                        max_len: int = 32):
+    """Trace the engine's compiled greedy decode chunk exactly as
+    ``Engine.run`` builds it."""
+    from repro.serving.engine import Engine
+
+    params = _lm_params(cfg)
+    eng = Engine(cfg, params, max_len=max_len, jit=False,
+                 num_slots=slots, decode_chunk=4)
+    chunk = eng._get_chunk(slots, max_gen, greedy=True, eos_id=None)
+    args = engine_chunk_args(eng, slots, max_gen)
+    caches = args[1]
     return jax.make_jaxpr(chunk)(*args), params, caches, args
 
 
@@ -344,8 +359,6 @@ def _audit_decode_chunk() -> List[Violation]:
                                       entry)
     out += cache_repeat_violations(jaxpr, cfg.num_heads, cfg.num_kv_heads,
                                    max_len, entry)
-    out += big_intermediate_violations(jaxpr, auto_budget(params, caches),
-                                       entry)
     out += accum_dtype_violations(jaxpr, entry)
     return out
 
@@ -466,8 +479,6 @@ def _audit_sparse_mha_decode() -> List[Violation]:
     return (kernel_count_violations(jaxpr, entry, "exact", exact=1)
             + forbidden_primitive_violations(jaxpr, entry)
             + cache_repeat_violations(jaxpr, hq, hk, s, entry)
-            + big_intermediate_violations(
-                jaxpr, auto_budget((q, k, v, codes, cb)), entry)
             + accum_dtype_violations(jaxpr, entry))
 
 
@@ -488,8 +499,6 @@ def _audit_sparse_mha_decode_two_pass() -> List[Violation]:
     return (kernel_count_violations(jaxpr, entry, "exact", exact=2)
             + forbidden_primitive_violations(jaxpr, entry)
             + cache_repeat_violations(jaxpr, hq, hk, s, entry)
-            + big_intermediate_violations(
-                jaxpr, auto_budget((q, k, v, codes, cb)), entry)
             + accum_dtype_violations(jaxpr, entry))
 
 
@@ -516,8 +525,6 @@ def _audit_decode_chunk_paged() -> List[Violation]:
                                    ps, kvp.num_pages(max_len, ps), entry)
     out += cache_repeat_violations(jaxpr, cfg.num_heads, cfg.num_kv_heads,
                                    view, entry)
-    out += big_intermediate_violations(jaxpr, auto_budget(params, caches),
-                                       entry)
     out += accum_dtype_violations(jaxpr, entry)
     return out
 

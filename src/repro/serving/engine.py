@@ -114,6 +114,20 @@ def decode_cache_axes(cfg: ModelConfig, kv_paged: bool = False):
     return transformer.cache_axes(cfg, kv_paged=kv_paged)
 
 
+# Donated positions of the compiled decode chunk
+# chunk(params, caches, page_table, astate, tok, pos, active, n, limit,
+#       buf, keys, temps, topks, topps): everything the chunk returns
+# updated with an identical aval — caches/page_table/astate plus the
+# per-slot decode state (tok, pos, active, n_gen, buf).  The scheduler
+# passes fresh device arrays from its numpy mirrors each call and copies
+# the outputs back, so the donated buffers are never re-read on the
+# host.  limit/keys/temps/topks/topps are read-only inputs (not chunk
+# outputs) and must NOT be donated — XLA would warn and silently copy.
+# analysis/liveness.py and analysis/donation.py key on this constant, so
+# the audit and the jit site cannot drift apart.
+CHUNK_DONATE_ARGNUMS = (1, 2, 3, 4, 5, 6, 7, 9)
+
+
 # ---------------------------------------------------------------- arrivals
 class ManualClock:
     """Deterministic serve clock: ``clock()`` reads virtual time, and the
@@ -503,6 +517,8 @@ class Engine:
         self._prefill = build_prefill_step(cfg, max_len)
         self._decode = build_decode_step(cfg)
         if jit:
+            # no-donate: lm_prefill builds its caches in-jit (no
+            # cache-sized operand); batch tokens alias nothing.
             self._prefill = jax.jit(self._prefill)
             self._decode = jax.jit(self._decode, donate_argnums=(1,))
         self._prefill_one: Optional[Callable] = None
@@ -583,6 +599,8 @@ class Engine:
                 return transformer.lm_prefill_ragged(
                     params, cfg, batch, lengths, max_len,
                     return_counters=tel_on)
+            # no-donate: ragged prefill also inits its cache rows in-jit;
+            # tokens/lengths are read-only and alias no output.
             self._prefill_one = jax.jit(fn) if self._use_jit else fn
         return self._prefill_one
 
@@ -813,7 +831,7 @@ class Engine:
             return res + ((out[9],) if tel_on else ())
 
         if self._use_jit:
-            chunk = jax.jit(chunk, donate_argnums=(1, 2, 3))
+            chunk = jax.jit(chunk, donate_argnums=CHUNK_DONATE_ARGNUMS)
         self._chunk_cache[key] = chunk
         return chunk
 
@@ -1303,6 +1321,11 @@ class Engine:
         chunk_fn = self._get_chunk(self.num_slots, st.max_gen, st.greedy,
                                    st.eos_id, st.use_topp)
         n_prev = st.n_gen.copy()
+        # capture the pre-chunk active mask BEFORE handing the device
+        # copies to the jit call: the chunk donates the slot-state
+        # buffers (CHUNK_DONATE_ARGNUMS), so no donated mirror may be
+        # read between the call and its reassignment below
+        was_active = st.active.copy()
         t0 = time.perf_counter()
         out = chunk_fn(self.params, st.caches, st.page_table, st.astate,
                        jnp.asarray(st.tok), jnp.asarray(st.pos),
@@ -1326,7 +1349,7 @@ class Engine:
                      steps=int(steps),
                      active=int(np.array(act_d).sum()))
         self._track_peak()
-        prev_total = int(st.n_gen.sum())
+        prev_total = int(n_prev.sum())
         # writable host mirrors (np.asarray of a jax array is read-only)
         st.tok = np.array(tok_d)
         st.pos = np.array(pos_d)
@@ -1335,7 +1358,6 @@ class Engine:
         st.buf = np.array(buf_d)
         st.stats.decode_steps += int(steps)
         st.stats.decode_tokens += int(st.n_gen.sum()) - prev_total
-        was_active = st.active
         st.active = act_new
         for b in range(self.num_slots):
             it = st.slot_item[b]

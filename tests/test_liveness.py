@@ -1,0 +1,267 @@
+"""Memory-lifetime analysis tests: the liveness pass on hand-built
+jaxprs with known peak live sets, a violating fixture per audit rule
+(liveness.*, donation.*, memory.*), the engine-level greedy bit-identity
+check for the extended chunk donation mask, and the full clean-at-HEAD
+sweep (slow), following the tests/test_analysis.py pattern.
+
+Byte expectations: pinned/donated straight-line peaks are exact; loop
+and dynamic_update_slice fixtures allow a +64 B slack for the scalar
+index/counter constants jax inserts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis import baselines as bl
+from repro.analysis import donation as dn
+from repro.analysis import liveness as lv
+from repro.analysis import registry
+
+N = 4096            # one (1024,) f32 buffer
+
+
+def rules(violations):
+    return sorted({v.rule for v in violations})
+
+
+def peak_of(fn, args, donated=None, names=None):
+    closed = jax.make_jaxpr(fn)(*args)
+    rep = lv.analyze_closed(closed, donated=donated, arg_names=names,
+                            entry="fixture")
+    return rep
+
+
+def _x():
+    return jax.ShapeDtypeStruct((1024,), jnp.float32)
+
+
+# ------------------------------------------------------- liveness fixtures
+def test_straight_line_pinned_vs_donated():
+    """y = x*2; z = y*3.  Pinned x is resident at the second eqn
+    (x+y+z = 3N); donated x dies after the first (peak y+z = 2N)."""
+    fn = lambda x: (x * 2.0) * 3.0
+    pinned = peak_of(fn, (_x(),), donated=[False], names=["x"])
+    donated = peak_of(fn, (_x(),), donated=[True], names=["x"])
+    assert pinned.signature.peak_live_bytes == 3 * N
+    assert donated.signature.peak_live_bytes == 2 * N
+    assert donated.signature.donated_bytes == N
+    # provenance: the arg label survives into the peak contributors
+    assert any(c.label == "x" for c in pinned.peak.contributors)
+
+
+def test_while_carry_copy_surcharge():
+    """A while carry holds one N-byte buffer: the body's live set is
+    ~2N (old + new carry value).  A donated operand aliases the carry
+    (peak ~2N); a pinned operand pays the copy-on-entry surcharge — the
+    caller's buffer stays resident alongside the loop's copy (~3N)."""
+    def fn(x):
+        return jax.lax.while_loop(
+            lambda c: c[0] < 10,
+            lambda c: (c[0] + 1, c[1] * 2.0),
+            (jnp.int32(0), x))[1]
+
+    donated = peak_of(fn, (_x(),), donated=[True], names=["x"])
+    pinned = peak_of(fn, (_x(),), donated=[False], names=["x"])
+    assert 2 * N <= donated.signature.peak_live_bytes <= 2 * N + 64
+    assert 3 * N <= pinned.signature.peak_live_bytes <= 3 * N + 64
+    assert (pinned.signature.peak_live_bytes
+            - donated.signature.peak_live_bytes) == N
+
+
+def test_dynamic_update_slice_aliases_donated_operand():
+    """An in-place cache write (DUS) whose operand is donated aliases
+    its output (~1N + the row); pinned keeps both copies (~2N)."""
+    row = jax.ShapeDtypeStruct((64,), jnp.float32)
+
+    def fn(x, r):
+        return jax.lax.dynamic_update_slice(x, r, (0,))
+
+    rb = 64 * 4
+    donated = peak_of(fn, (_x(), row), donated=[True, False])
+    pinned = peak_of(fn, (_x(), row), donated=[False, False])
+    assert N + rb <= donated.signature.peak_live_bytes <= N + rb + 64
+    assert 2 * N + rb <= pinned.signature.peak_live_bytes <= 2 * N + rb + 64
+
+
+def test_pallas_scratch_counts_exactly():
+    """A pallas_call contributes operands + outputs + VMEM scratch and
+    is never recursed into (its refs are not HBM buffers)."""
+    from repro.kernels.topl_select.topl_select import vmem
+
+    def kernel(x_ref, o_ref, s_ref):
+        s_ref[...] = x_ref[...] * 2.0
+        o_ref[...] = s_ref[...]
+
+    shape = jax.ShapeDtypeStruct((128,), jnp.float32)   # 512 B
+    fn = pl.pallas_call(kernel, out_shape=shape,
+                        scratch_shapes=[vmem((128,), jnp.float32)],
+                        interpret=True)
+    rep = peak_of(fn, (shape,))
+    assert rep.signature.peak_live_bytes == 3 * 512     # x + o + scratch
+    assert rep.signature.pallas_calls == 1
+
+
+def test_scan_xs_and_stacked_ys_stay_resident():
+    """scan holds the full xs and the filling ys for its whole run:
+    peak ≥ xs + ys + carry even though each iteration sees one slice."""
+    xs = jax.ShapeDtypeStruct((8, 1024), jnp.float32)   # 8N... = 32768
+
+    def fn(xs):
+        return jax.lax.scan(lambda c, x: (c + x.sum(), x * 2.0),
+                            jnp.float32(0.0), xs)[1]
+
+    rep = peak_of(fn, (xs,), donated=[True], names=["xs"])
+    assert rep.signature.peak_live_bytes >= 2 * 8 * N   # xs + stacked ys
+    # per-iteration slices are labeled with provenance
+    assert any(c.label == "xs[iter]" for c in rep.peak.contributors)
+
+
+# --------------------------------------------------- liveness audit rules
+def test_liveness_trace_failure_rule():
+    def boom():
+        raise RuntimeError("no trace")
+
+    assert rules(lv.entry_violations("e", boom)) \
+        == ["liveness.trace-failure"]
+
+
+def test_liveness_empty_rule():
+    empty = lv.MemoryReport(
+        "e", lv.MemorySignature(0, 0, 0, 0), (),
+        lv.PeakInfo(0, "entry", ()))
+    assert rules(lv.entry_violations("e", lambda: empty)) \
+        == ["liveness.empty"]
+
+
+def test_liveness_donation_unused_rule():
+    """An entry registered with expect_donation must report donated
+    bytes — a zero means the mask plumbing silently broke."""
+    assert "engine.decode_chunk" in lv._EXPECT_DONATION
+    rep = lv.MemoryReport(
+        "engine.decode_chunk", lv.MemorySignature(100, 0, 1, 0), (),
+        lv.PeakInfo(100, "entry", ()))
+    assert rules(lv.entry_violations("engine.decode_chunk", lambda: rep)) \
+        == ["liveness.donation-unused"]
+
+
+# ---------------------------------------------------- donation audit rules
+def test_donation_missing_rule_fires_on_undonated_cache():
+    cache = jnp.zeros((256,), jnp.float32)
+    f = jax.jit(lambda c, x: c + x)                     # nothing donated
+    vs = dn.donation_violations("e", f, (cache, jnp.float32(1.0)))
+    assert rules(vs) == ["donation.missing"]
+    g = jax.jit(lambda c, x: c + x, donate_argnums=(0,))
+    assert dn.donation_violations("e", g, (cache, jnp.float32(1.0))) == []
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_donation_cannot_alias_rule_fires_on_shape_mismatch():
+    f = jax.jit(lambda x: x.sum(), donate_argnums=(0,))
+    vs = dn.donation_violations("e", f, (jnp.ones((64,)),))
+    assert rules(vs) == ["donation.cannot-alias"]
+
+
+def test_donation_exempt_argnums_are_skipped():
+    cache = jnp.zeros((256,), jnp.float32)
+    f = jax.jit(lambda c, x: c + x)
+    assert dn.donation_violations("e", f, (cache, jnp.float32(1.0)),
+                                  exempt_argnums=(0,)) == []
+
+
+def test_jit_site_lint():
+    bad = "import jax\nf = jax.jit(g)\n"
+    marked = ("import jax\n"
+              "# no-donate: params are engine-owned\n"
+              "f = jax.jit(g)\n")
+    donating = "import jax\nf = jax.jit(g, donate_argnums=(0,))\n"
+    assert rules(dn.jit_site_violations(bad, "serving/x.py")) \
+        == ["donation.jit-site"]
+    assert dn.jit_site_violations(marked, "serving/x.py") == []
+    assert dn.jit_site_violations(donating, "serving/x.py") == []
+
+
+# ----------------------------------------------------- memory ratchet rules
+def _sig(peak=1000, donated=100, eqns=50, pallas=2):
+    return {"peak_live_bytes": peak, "donated_bytes": donated,
+            "eqns": eqns, "pallas_calls": pallas}
+
+
+def test_memory_ratchet_fails_on_injected_regression():
+    """The acceptance-criterion fixture: a grown live set (or a lost
+    donation) against the golden signature must fail the gate."""
+    golden = {"e": _sig()}
+    assert bl.diff_signatures({"e": _sig()}, golden) == []
+    assert rules(bl.diff_signatures({"e": _sig(peak=1500)}, golden)) \
+        == ["memory.regression"]
+    assert rules(bl.diff_signatures({"e": _sig(donated=0)}, golden)) \
+        == ["memory.regression"]
+
+
+def test_memory_ratchet_flags_unrecorded_improvements():
+    golden = {"e": _sig()}
+    assert rules(bl.diff_signatures({"e": _sig(peak=900)}, golden)) \
+        == ["memory.stale-baseline"]
+    assert rules(bl.diff_signatures({"e": _sig(donated=200)}, golden)) \
+        == ["memory.stale-baseline"]
+
+
+def test_memory_ratchet_flags_shape_drift_and_missing_entries():
+    golden = {"e": _sig()}
+    assert rules(bl.diff_signatures({"e": _sig(pallas=3)}, golden)) \
+        == ["memory.signature-drift"]
+    assert rules(bl.diff_signatures({"e": _sig(eqns=60)}, golden)) \
+        == ["memory.signature-drift"]        # +20% > the ±10% band
+    assert bl.diff_signatures({"e": _sig(eqns=54)}, golden) == []
+    assert rules(bl.diff_signatures({"e": _sig(), "new": _sig()}, golden)) \
+        == ["memory.baseline-missing"]
+    assert rules(bl.diff_signatures({}, golden)) \
+        == ["memory.baseline-missing"]
+
+
+def test_committed_baselines_parse_and_cover_registry():
+    golden = bl.load_baselines()
+    assert set(golden) == set(lv.MEMORY_ENTRYPOINTS)
+    for sig in golden.values():
+        assert set(sig) == set(bl._FIELDS)
+        assert sig["peak_live_bytes"] > 0
+
+
+# ------------------------------------------- engine greedy bit-identity
+def test_greedy_stream_bit_identical_under_donation():
+    """The extended chunk donation mask (slot state included) must not
+    change a single token vs the undonated eager engine — donated
+    buffers being reused while the scheduler still holds host mirrors
+    would show up here first."""
+    from repro import configs
+    from repro.core.params import init_tree
+    from repro.serving.engine import Engine, Request
+    from repro.train.state import model_defs
+
+    cfg = dataclasses.replace(
+        configs.get_smoke("qwen3-0.6b"), num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256).with_spt(ffn_capacity_factor=8.0)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i, tokens=rng.integers(
+                0, 256, size=ln, dtype=np.int32).tolist(),
+                max_new_tokens=6)
+            for i, ln in enumerate([8, 11, 6, 9])]
+    outs = {}
+    for use_jit in (True, False):
+        eng = Engine(cfg, params, max_len=48, jit=use_jit, num_slots=2,
+                     decode_chunk=4)
+        res = eng.run(list(reqs))
+        outs[use_jit] = [(c.uid, c.tokens, c.finish_reason) for c in res]
+    assert outs[True] == outs[False]
+
+
+# ------------------------------------------------- full registry (slow)
+@pytest.mark.slow
+def test_memory_audits_clean_at_head():
+    """liveness + donation + memory-ratchet over the real entrypoints —
+    the same sweep scripts/analyze.sh gates CI with."""
+    assert registry.run_audits(["liveness", "donation", "memory"]) == []
